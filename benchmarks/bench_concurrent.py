@@ -1,0 +1,80 @@
+"""Paper Fig. 11: concurrent training+inference — % training-throughput loss
+vs optimal, per strategy, over the paper's 5 {train, infer} DNN pairs."""
+from __future__ import annotations
+
+from repro.core import problem as P
+from repro.core.als import ALSConcurrent, QuadrantRanges
+from repro.core.baselines import NNConcurrentBaseline, RNDConcurrent
+from repro.core.device_model import INFER_WORKLOADS, Profiler, TRAIN_WORKLOADS
+from repro.core.gmd import ConcurrentProfiler, GMDConcurrent
+
+from benchmarks.common import DEV, ORACLE, SPACE, loss_pct, median, row, \
+    concurrent_problem_grid
+
+# {train, infer} pairs from §7.3
+PAIRS = [("yolov8n", "resnet50"), ("resnet18", "mobilenet"),
+         ("mobilenet", "mobilenet"), ("resnet18", "bert"),
+         ("mobilenet", "lstm")]
+NN_EPOCHS = 300
+
+
+def _quadrants(bert: bool) -> QuadrantRanges:
+    if bert:
+        return QuadrantRanges(latency=(2.0, 6.0), arrival=(1.0, 15.0))
+    return QuadrantRanges(latency=(0.5, 2.0), arrival=(30.0, 120.0))
+
+
+def _cp(w_tr, w_in) -> ConcurrentProfiler:
+    return ConcurrentProfiler(Profiler(DEV, w_tr), Profiler(DEV, w_in))
+
+
+def run(full: bool = False, pairs=None) -> list[str]:
+    rows = []
+    for tr_name, in_name in (pairs or PAIRS):
+        w_tr, w_in = TRAIN_WORKLOADS[tr_name], INFER_WORKLOADS[in_name]
+        bert = in_name == "bert"
+        probs = concurrent_problem_grid(full, bert=bert)
+        fitted = {
+            "als145": ALSConcurrent(_cp(w_tr, w_in), _quadrants(bert), SPACE,
+                                    nn_epochs=NN_EPOCHS),
+            "rnd150": RNDConcurrent(_cp(w_tr, w_in), 150, SPACE),
+            "rnd250": RNDConcurrent(_cp(w_tr, w_in), 250, SPACE),
+            "nn250": NNConcurrentBaseline(_cp(w_tr, w_in), 250, SPACE,
+                                          nn_epochs=NN_EPOCHS),
+        }
+        strategies = {"gmd15": None, **fitted}
+        for sname, strat in strategies.items():
+            losses, viols, solved, solvable = [], 0, 0, 0
+            for prob in probs:
+                opt = ORACLE.solve_concurrent(w_tr, w_in, prob)
+                if opt is None or opt.throughput <= 0:
+                    continue
+                solvable += 1
+                if sname == "gmd15":
+                    sol = GMDConcurrent(_cp(w_tr, w_in), SPACE).solve(prob)
+                else:
+                    sol = strat.solve(prob)
+                if sol is None:
+                    continue
+                t_in, p_in = DEV.time_power(w_in, sol.pm, sol.bs)
+                t_tr, p_tr = DEV.time_power(w_tr, sol.pm)
+                lam = P.peak_latency(sol.bs, prob.arrival_rate, t_in)
+                if (max(p_in, p_tr) > prob.power_budget + 1e-9
+                        or lam > prob.latency_budget + 1e-9
+                        or not P.sustainable(sol.bs, prob.arrival_rate, t_in)):
+                    viols += 1
+                    continue
+                solved += 1
+                theta = P.train_throughput(sol.bs, prob.arrival_rate, t_in, t_tr)
+                losses.append(loss_pct(opt.throughput, theta))
+            pct = 100.0 * solved / max(solvable, 1)
+            rows.append(row(
+                f"concurrent/{tr_name}+{in_name}/{sname}/median_tput_loss_pct",
+                median(losses),
+                f"solved_pct={pct:.1f};violations={viols};solvable={solvable}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

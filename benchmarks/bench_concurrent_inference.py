@@ -1,0 +1,75 @@
+"""Paper Fig. 14: two concurrent inferences — maximize non-urgent inference
+throughput subject to the urgent inference's latency deadline and the power
+budget. Pairs {non-urgent, urgent}: {ResNet50, BERT} and {ResNet50, MNet}
+modeled as the concurrent problem with the non-urgent batch inference
+(fixed bs=32) playing the training role (§5.4)."""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core import problem as P
+from repro.core.als import ALSConcurrent, QuadrantRanges
+from repro.core.baselines import NNConcurrentBaseline, RNDConcurrent
+from repro.core.device_model import INFER_WORKLOADS, Profiler
+from repro.core.gmd import ConcurrentProfiler, GMDConcurrent
+
+from benchmarks.common import DEV, ORACLE, SPACE, loss_pct, median, row, \
+    concurrent_problem_grid
+
+NN_EPOCHS = 300
+PAIRS = [("resnet50", "bert"), ("resnet50", "mobilenet")]
+
+
+def _nonurgent(name: str):
+    return dataclasses.replace(INFER_WORKLOADS[name],
+                               name=f"{name}-nonurgent", train_bs=32)
+
+
+def run(full: bool = False) -> list[str]:
+    rows = []
+    for nu_name, u_name in PAIRS:
+        w_nu = _nonurgent(nu_name)
+        w_u = INFER_WORKLOADS[u_name]
+        bert = u_name == "bert"
+        probs = concurrent_problem_grid(full, bert=bert)
+        quad = (QuadrantRanges((2.0, 6.0), (1.0, 15.0)) if bert
+                else QuadrantRanges((0.5, 2.0), (30.0, 120.0)))
+        mk = lambda: ConcurrentProfiler(Profiler(DEV, w_nu), Profiler(DEV, w_u))
+        fitted = {
+            "als145": ALSConcurrent(mk(), quad, SPACE, nn_epochs=NN_EPOCHS),
+            "rnd150": RNDConcurrent(mk(), 150, SPACE),
+            "rnd250": RNDConcurrent(mk(), 250, SPACE),
+            "nn250": NNConcurrentBaseline(mk(), 250, SPACE, nn_epochs=NN_EPOCHS),
+        }
+        strategies = {"gmd15": None, **fitted}
+        for sname, strat in strategies.items():
+            losses, solved, solvable = [], 0, 0
+            for prob in probs:
+                opt = ORACLE.solve_concurrent(w_nu, w_u, prob)
+                if opt is None or opt.throughput <= 0:
+                    continue
+                solvable += 1
+                sol = (GMDConcurrent(mk(), SPACE).solve(prob)
+                       if sname == "gmd15" else strat.solve(prob))
+                if sol is None:
+                    continue
+                t_u, p_u = DEV.time_power(w_u, sol.pm, sol.bs)
+                t_nu, p_nu = DEV.time_power(w_nu, sol.pm)
+                lam = P.peak_latency(sol.bs, prob.arrival_rate, t_u)
+                if (max(p_u, p_nu) > prob.power_budget + 1e-9
+                        or lam > prob.latency_budget + 1e-9
+                        or not P.sustainable(sol.bs, prob.arrival_rate, t_u)):
+                    continue
+                solved += 1
+                theta = P.train_throughput(sol.bs, prob.arrival_rate, t_u, t_nu)
+                losses.append(loss_pct(opt.throughput, theta))
+            pct = 100.0 * solved / max(solvable, 1)
+            rows.append(row(
+                f"concurrent_infer/{nu_name}+{u_name}/{sname}/median_tput_loss_pct",
+                median(losses), f"solved_pct={pct:.1f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,83 @@
+"""Paper Fig. 12/13: inference with dynamic arrival rates — median excess
+latency over optimal and % solutions found, per strategy, over Poisson /
+Alibaba-like / Azure-like traces (24 x 5-min windows, rate changes per
+window; power 40 W, latency 100 ms as in §7.4)."""
+from __future__ import annotations
+
+import math
+import random
+
+from repro.core import problem as P
+from repro.core.als import ALSInfer, QuadrantRanges
+from repro.core.baselines import NNInferBaseline, RNDInfer
+from repro.core.device_model import INFER_WORKLOADS, Profiler
+from repro.core.scheduler import Fulcrum
+
+from benchmarks.common import DEV, ORACLE, SPACE, excess_pct, median, row
+
+POWER, LATENCY = 40.0, 0.1
+NN_EPOCHS = 300
+
+
+def make_traces(windows: int = 24) -> dict[str, list[float]]:
+    rng = random.Random(42)
+    poisson = [max(30.0, min(76.0, rng.gauss(60, math.sqrt(60))))
+               for _ in range(windows)]
+    alibaba = [30 + 23 * (1 + math.sin(2 * math.pi * i / windows - 1.2))
+               + rng.uniform(-3, 3) for i in range(windows)]      # <= ~76
+    azure = []
+    for i in range(windows):       # bursty: baseline + spikes to 115
+        base = 45 + rng.uniform(-10, 10)
+        azure.append(min(115.0, base + (70 if rng.random() < 0.2 else 0)))
+    return {"poisson": poisson, "alibaba": alibaba, "azure": azure}
+
+
+def run(full: bool = False, dnns=None) -> list[str]:
+    rows = []
+    dnns = dnns or ["resnet50", "mobilenet", "yolov8n", "lstm"]
+    traces = make_traces(24 if full else 12)
+    for name in dnns:
+        w = INFER_WORKLOADS[name]
+        fitted = {
+            "als145": ALSInfer(Profiler(DEV, w),
+                               QuadrantRanges((0.05, 1.0), (30.0, 90.0)),
+                               SPACE, nn_epochs=NN_EPOCHS),
+            "rnd150": RNDInfer(Profiler(DEV, w), 150, SPACE),
+            "rnd250": RNDInfer(Profiler(DEV, w), 250, SPACE),
+            "nn250": NNInferBaseline(Profiler(DEV, w), 250, SPACE,
+                                     nn_epochs=NN_EPOCHS),
+        }
+        for trace_name, rates in traces.items():
+            # GMD: shared profiling history across windows (§5.4)
+            f = Fulcrum(DEV, SPACE)
+            strategies = {"gmd": None, **fitted}
+            for sname, strat in strategies.items():
+                exc, found = [], 0
+                if sname == "gmd":
+                    sols = f.solve_dynamic(w, POWER, LATENCY, rates, "gmd")
+                else:
+                    sols = [strat.solve(P.InferProblem(POWER, LATENCY, r))
+                            for r in rates]
+                for sol, rate in zip(sols, rates):
+                    prob = P.InferProblem(POWER, LATENCY, rate)
+                    opt = ORACLE.solve_infer(w, prob)
+                    if opt is None:
+                        continue
+                    if sol is None:
+                        continue
+                    t_true, p_true = DEV.time_power(w, sol.pm, sol.bs)
+                    lam = P.peak_latency(sol.bs, rate, t_true)
+                    if (p_true > POWER + 1e-9 or lam > LATENCY + 1e-9
+                            or not P.sustainable(sol.bs, rate, t_true)):
+                        continue
+                    found += 1
+                    exc.append(excess_pct(lam, opt.time))
+                rows.append(row(
+                    f"dynamic/{name}/{trace_name}/{sname}/median_excess_pct",
+                    median(exc), f"found={found}/{len(rates)}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

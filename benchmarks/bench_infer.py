@@ -1,0 +1,70 @@
+"""Paper Fig. 10: standalone inference — excess-over-optimal latency, %
+problems solved, budget violations, per strategy."""
+from __future__ import annotations
+
+from repro.core import problem as P
+from repro.core.als import ALSInfer, QuadrantRanges
+from repro.core.baselines import NNInferBaseline, RNDInfer
+from repro.core.device_model import INFER_WORKLOADS, Profiler
+from repro.core.gmd import GMDInfer
+
+from benchmarks.common import DEV, ORACLE, SPACE, excess_pct, median, row, \
+    infer_problem_grid
+
+NN_EPOCHS = 300
+
+
+def _quadrants(bert: bool) -> QuadrantRanges:
+    if bert:
+        return QuadrantRanges(latency=(1.0, 10.0), arrival=(1.0, 5.0))
+    return QuadrantRanges(latency=(0.05, 1.0), arrival=(30.0, 90.0))
+
+
+def run(full: bool = False, dnns=None) -> list[str]:
+    rows = []
+    for name in (dnns or INFER_WORKLOADS):
+        w = INFER_WORKLOADS[name]
+        bert = name == "bert"
+        probs = infer_problem_grid(full, bert=bert)
+        fitted = {
+            "als145": ALSInfer(Profiler(DEV, w), _quadrants(bert), SPACE,
+                               nn_epochs=NN_EPOCHS),
+            "rnd150": RNDInfer(Profiler(DEV, w), 150, SPACE),
+            "rnd250": RNDInfer(Profiler(DEV, w), 250, SPACE),
+            "nn250": NNInferBaseline(Profiler(DEV, w), 250, SPACE,
+                                     nn_epochs=NN_EPOCHS),
+        }
+        strategies = {"gmd11": None, **fitted}
+        for sname, strat in strategies.items():
+            exc, viols, solved, solvable = [], 0, 0, 0
+            for prob in probs:
+                opt = ORACLE.solve_infer(w, prob)
+                if opt is None:
+                    continue
+                solvable += 1
+                if sname == "gmd11":
+                    sol = GMDInfer(Profiler(DEV, w), SPACE).solve(prob)
+                else:
+                    sol = strat.solve(prob)
+                if sol is None:
+                    continue
+                t_true, p_true = DEV.time_power(w, sol.pm, sol.bs)
+                lam_true = P.peak_latency(sol.bs, prob.arrival_rate, t_true)
+                if (p_true > prob.power_budget + 1e-9
+                        or lam_true > prob.latency_budget + 1e-9
+                        or not P.sustainable(sol.bs, prob.arrival_rate, t_true)):
+                    viols += 1       # NN's prediction errors surface here
+                    continue
+                solved += 1
+                exc.append(excess_pct(lam_true, opt.time))
+            pct = 100.0 * solved / max(solvable, 1)
+            rows.append(row(f"infer/{name}/{sname}/median_excess_latency_pct",
+                            median(exc),
+                            f"solved_pct={pct:.1f};violations={viols};"
+                            f"solvable={solvable}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

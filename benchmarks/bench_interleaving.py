@@ -1,0 +1,47 @@
+"""Paper Fig. 2: native vs streams vs managed interleaving — inference
+latency distribution and training throughput over 10 problem configs."""
+from __future__ import annotations
+
+from repro.core import problem as P
+from repro.core.device_model import INFER_WORKLOADS, Profiler, TRAIN_WORKLOADS
+from repro.core.gmd import ConcurrentProfiler, GMDConcurrent
+from repro.core.interleave import (simulate_managed, simulate_native,
+                                   simulate_streams)
+
+from benchmarks.common import DEV, SPACE, row
+
+# Fig. 2's setup: concurrent MobileNet train + MobileNet infer, 10 configs
+CONFIGS = [(40, 0.6, 22), (50, 0.8, 24), (60, 0.8, 26), (70, 1.0, 28),
+           (80, 1.0, 30), (90, 1.0, 32), (100, 1.2, 34), (110, 1.2, 36),
+           (120, 1.2, 38), (60, 0.6, 40)]   # (rate RPS, latency s, power W)
+
+
+def run(full: bool = False) -> list[str]:
+    w_tr = TRAIN_WORKLOADS["mobilenet"]
+    w_in = INFER_WORKLOADS["mobilenet"]
+    rows = []
+    duration = 120.0 if full else 60.0
+    for i, (rate, lat, power) in enumerate(CONFIGS, 1):
+        prob = P.ConcurrentProblem(float(power), lat, float(rate))
+        cp = ConcurrentProfiler(Profiler(DEV, w_tr), Profiler(DEV, w_in))
+        plan = GMDConcurrent(cp, SPACE).solve(prob)
+        if plan is None:
+            rows.append(row(f"interleave/cfg{i}/unsolved", 1))
+            continue
+        pm, bs = plan.pm, plan.bs
+        for sim, name in ((simulate_managed, "managed"),
+                          (simulate_native, "native"),
+                          (simulate_streams, "streams")):
+            rep = sim(DEV, w_tr, w_in, pm, bs, float(rate), duration=duration)
+            rows.append(row(
+                f"interleave/cfg{i}/{name}/q3_latency_ms",
+                rep.latency_quantile(0.75) * 1e3,
+                f"viol_pct={100*rep.violation_rate(lat):.1f};"
+                f"tput={rep.train_throughput:.2f}mb_s;"
+                f"median_ms={rep.latency_quantile(0.5)*1e3:.0f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,59 @@
+"""Paper Fig. 9: standalone training — excess-over-optimal minibatch time and
+power-budget violations, per strategy, across the power-budget sweep."""
+from __future__ import annotations
+
+from repro.core import problem as P
+from repro.core.als import ALSTrain
+from repro.core.baselines import NNTrainBaseline, RNDTrain
+from repro.core.device_model import Profiler, TRAIN_WORKLOADS
+from repro.core.gmd import GMDTrain
+
+from benchmarks.common import DEV, ORACLE, SPACE, excess_pct, median, row, \
+    train_problem_grid
+
+NN_EPOCHS = 300
+
+
+def run(full: bool = False, dnns=None) -> list[str]:
+    rows = []
+    for name in (dnns or TRAIN_WORKLOADS):
+        w = TRAIN_WORKLOADS[name]
+        probs = train_problem_grid(full, bert=(name == "bert"))
+        fitted = {
+            "als50": ALSTrain(Profiler(DEV, w), SPACE, nn_epochs=NN_EPOCHS),
+            "rnd50": RNDTrain(Profiler(DEV, w), 50, SPACE),
+            "rnd250": RNDTrain(Profiler(DEV, w), 250, SPACE),
+            "nn250": NNTrainBaseline(Profiler(DEV, w), 250, SPACE,
+                                     nn_epochs=NN_EPOCHS),
+        }
+        strategies = {"gmd10": None, **fitted}
+        for sname, strat in strategies.items():
+            exc, viols, solved, runs = [], 0, 0, []
+            for prob in probs:
+                opt = ORACLE.solve_train(w, prob)
+                if opt is None:
+                    continue
+                if sname == "gmd10":
+                    prof = Profiler(DEV, w)
+                    sol = GMDTrain(prof, SPACE).solve(prob)
+                    runs.append(prof.num_runs)
+                else:
+                    sol = strat.solve(prob)
+                if sol is None:
+                    continue
+                solved += 1
+                t_true, p_true = DEV.time_power(w, sol.pm)   # ground truth
+                if p_true > prob.power_budget + 1e-9:
+                    viols += 1
+                exc.append(excess_pct(t_true, opt.time))
+            nruns = (max(runs) if runs else
+                     strat.profiler.num_runs if strat else 0)
+            rows.append(row(f"train/{name}/{sname}/median_excess_time_pct",
+                            median(exc),
+                            f"solved={solved};violations={viols};modes={nruns}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

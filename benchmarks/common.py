@@ -1,0 +1,73 @@
+"""Shared helpers for the paper-figure benchmarks."""
+from __future__ import annotations
+
+import statistics
+from typing import Iterable, Optional
+
+from repro.core import problem as P
+from repro.core.device_model import DeviceModel, Profiler
+from repro.core.gmd import ConcurrentProfiler
+from repro.core.oracle import Oracle
+from repro.core.powermode import PowerModeSpace
+
+DEV = DeviceModel()
+SPACE = PowerModeSpace()
+ORACLE = Oracle(DEV, SPACE)
+
+
+def median(xs: Iterable[float]) -> float:
+    xs = list(xs)
+    return statistics.median(xs) if xs else float("nan")
+
+
+def excess_pct(val: float, opt: float) -> float:
+    return 100.0 * (val - opt) / max(opt, 1e-12)
+
+
+def loss_pct(opt: float, val: float) -> float:
+    return 100.0 * (opt - val) / max(opt, 1e-12)
+
+
+def row(name: str, value, derived: str = "") -> str:
+    if isinstance(value, float):
+        value = f"{value:.4g}"
+    return f"{name},{value},{derived}"
+
+
+def train_problem_grid(full: bool, bert: bool = False):
+    """Paper §7.1: power 10-50 W step 1 (10-60 for BERT)."""
+    hi = 61 if bert else 51
+    step = 1 if full else 2
+    return [P.TrainProblem(float(b)) for b in range(10, hi, step)]
+
+
+def infer_problem_grid(full: bool, bert: bool = False):
+    """Paper §7.2: power 10-50 step 1; latency 50-1000 ms step 10;
+    rate 30-90 step 5. BERT: latency 1-10 s step 200 ms, rate 1-5."""
+    if bert:
+        pows = range(10, 61, 1 if full else 5)
+        lats = [1 + 0.2 * i for i in range(46)] if full else [1, 2, 4, 6, 8, 10]
+        rates = [1, 2, 3, 4, 5]
+    else:
+        pows = range(10, 51, 1 if full else 5)
+        lats = ([0.05 + 0.01 * i for i in range(96)] if full
+                else [0.05, 0.1, 0.2, 0.4, 0.7, 1.0])
+        rates = range(30, 91, 5 if full else 20)
+    return [P.InferProblem(float(p), float(l), float(r))
+            for p in pows for l in lats for r in rates]
+
+
+def concurrent_problem_grid(full: bool, bert: bool = False):
+    """Paper §7.3: rate 30-120, latency 0.5-2 s step 100 ms (BERT: 2-6 s,
+    rate 1-15), power as in training."""
+    if bert:
+        pows = range(10, 61, 1 if full else 5)
+        lats = [2 + 0.4 * i for i in range(11)] if full else [2, 3, 4, 6]
+        rates = [1, 5, 10, 15]
+    else:
+        pows = range(10, 51, 1 if full else 5)
+        lats = ([0.5 + 0.1 * i for i in range(16)] if full
+                else [0.5, 1.0, 1.5, 2.0])
+        rates = range(30, 121, 10 if full else 30)
+    return [P.ConcurrentProblem(float(p), float(l), float(r))
+            for p in pows for l in lats for r in rates]

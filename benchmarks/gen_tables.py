@@ -1,0 +1,81 @@
+"""Generate the §Roofline markdown table from dryrun.json and splice it into
+EXPERIMENTS.md at the <!-- ROOFLINE_TABLE --> marker."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.bench_roofline import roofline_terms
+
+ROOT = Path(__file__).parent.parent
+MARKER = "<!-- ROOFLINE_TABLE -->"
+
+
+def fmt(v, scale=1.0, digits=3):
+    if v is None:
+        return "-"
+    return f"{v * scale:.{digits}g}"
+
+
+def build_table() -> str:
+    # single-pod baselines: the pre-hillclimb archive (one consistent code
+    # version for all 40 pairs); dryrun.json carries the final-code proof
+    # sweep + hillclimb variant rows.
+    data = json.loads(
+        (ROOT / "benchmarks/results/dryrun_hillclimb.json").read_text())
+    final = json.loads((ROOT / "benchmarks/results/dryrun.json").read_text())
+    lines = [
+        "## §Roofline — baseline table (40 pairs, single-pod, one code version)",
+        "",
+        "Per-device terms in seconds; `useful` = MODEL_FLOPS / HLO_FLOPs;",
+        "HBM = production-compile args+temp per device (CPU allocator, see",
+        "caveat 2). Variant rows (hillclimb artifacts) keep their tags.",
+        "",
+        "| pair | mesh | compute_s | memory_s | collective_s | dominant | useful | HBM GB | fits |",
+        "|---|---|--:|--:|--:|---|--:|--:|---|",
+    ]
+    n_ok = n_fail = 0
+    for key in sorted(data):
+        r = data[key]
+        parts = key.split("|")
+        pair = f"{parts[0]}·{parts[1]}" + (f" [{parts[3]}]" if len(parts) > 3 else "")
+        if not r.get("ok"):
+            n_fail += 1
+            lines.append(f"| {pair} | {parts[2]} | FAILED | | | | | | |")
+            continue
+        n_ok += 1
+        t = roofline_terms(r)
+        hbm = (t["hbm_args_gb"] or 0) + (t["hbm_temp_gb"] or 0)
+        lines.append(
+            f"| {pair} | {r['mesh']} | {fmt(t['compute_s'])} | {fmt(t['memory_s'])} "
+            f"| {fmt(t['collective_s'])} | {t['dominant'].replace('_s','')} "
+            f"| {fmt(t['useful_ratio'])} | {hbm:.1f} | "
+            f"{'yes' if t['fits_hbm'] else 'NO'} |")
+    lines.append("")
+    lines.append(f"{n_ok} compiles OK, {n_fail} failed.")
+
+    # final-code proof sweep summary
+    ok_single = sum(1 for k, r in final.items()
+                    if r.get("ok") and r.get("mesh") == "16x16"
+                    and len(k.split("|")) == 3)
+    ok_multi = sum(1 for k, r in final.items()
+                   if r.get("ok") and r.get("mesh") == "2x16x16"
+                   and len(k.split("|")) == 3)
+    fails = [k for k, r in final.items() if not r.get("ok")]
+    lines += ["", "### Final-code lowering proof (dryrun.json)",
+              "",
+              f"* single-pod 16x16: {ok_single} pairs compile OK",
+              f"* multi-pod 2x16x16 (512 chips): {ok_multi} pairs compile OK",
+              f"* failures: {fails if fails else 'none'}"]
+    return "\n".join(lines)
+
+
+def main() -> None:
+    exp = (ROOT / "EXPERIMENTS.md").read_text()
+    head = exp.split(MARKER)[0]
+    (ROOT / "EXPERIMENTS.md").write_text(head + MARKER + "\n\n" + build_table() + "\n")
+    print("EXPERIMENTS.md roofline table updated")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""Fulcrum-on-JAX: concurrent DNN training + inferencing scheduler (CS.DC
+2025 reproduction) inside a multi-pod JAX training/serving framework."""
+__version__ = "1.0.0"

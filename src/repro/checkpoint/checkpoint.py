@@ -1,0 +1,62 @@
+"""Sharding-aware npz checkpointing for param/optimizer pytrees.
+
+Leaves are saved under '/'-joined path keys; restore re-places each leaf with
+the provided shardings (so a checkpoint written on one mesh restores onto
+another — resharding happens at device_put).
+"""
+from __future__ import annotations
+
+import io
+import os
+import tempfile
+from pathlib import Path
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save_checkpoint(path: str | Path, tree: Any, step: int | None = None) -> None:
+    """Atomic write (tmp + rename)."""
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    flat = _flatten(tree)
+    if step is not None:
+        flat["__step__"] = np.asarray(step)
+    fd, tmp = tempfile.mkstemp(dir=path.parent, suffix=".tmp")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            np.savez(f, **flat)
+        os.replace(tmp, path)
+    except BaseException:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+        raise
+
+
+def restore_checkpoint(path: str | Path, like: Any,
+                       shardings: Optional[Any] = None) -> tuple[Any, int]:
+    """Restore into the structure of `like`; returns (tree, step)."""
+    with np.load(path) as data:
+        flat = {k: data[k] for k in data.files}
+    step = int(flat.pop("__step__", np.asarray(0)))
+    leaves_with_path = jax.tree_util.tree_flatten_with_path(like)
+    paths, treedef = leaves_with_path[0], leaves_with_path[1]
+    shard_leaves = (jax.tree_util.tree_flatten(shardings)[0]
+                    if shardings is not None else [None] * len(paths))
+    out = []
+    for (path, leaf), sh in zip(paths, shard_leaves):
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        arr = flat[key].astype(leaf.dtype) if hasattr(leaf, "dtype") else flat[key]
+        out.append(jax.device_put(arr, sh) if sh is not None else jax.numpy.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, out), step

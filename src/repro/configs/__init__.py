@@ -1,0 +1,2 @@
+from repro.configs.base import (ARCH_IDS, INPUT_SHAPES, InputShape, get_config,
+                                input_specs, make_batch, reduced)

@@ -1,0 +1,130 @@
+"""Config system: assigned input shapes, arch registry, reduced variants,
+and ShapeDtypeStruct input specs for the dry-run (no allocation)."""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import ModelConfig, init_cache
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+INPUT_SHAPES = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+ARCH_IDS = [
+    "mixtral-8x22b", "stablelm-12b", "arctic-480b", "qwen2.5-14b",
+    "zamba2-1.2b", "musicgen-medium", "stablelm-1.6b", "internvl2-1b",
+    "mamba2-780m", "minitron-4b",
+]
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{arch_id.replace('-', '_').replace('.', '_')}")
+    return mod.config()
+
+
+def reduced(cfg: ModelConfig) -> ModelConfig:
+    """Smoke-test variant of the same family: 2 layers, d_model<=512, <=4 experts."""
+    n_heads = min(cfg.n_heads, 4) if cfg.n_heads else 0
+    n_kv = max(1, min(cfg.n_kv_heads, n_heads)) if cfg.n_heads else 0
+    if cfg.n_heads and cfg.n_kv_heads == cfg.n_heads:
+        n_kv = n_heads                                   # keep MHA archs MHA
+    return dataclasses.replace(
+        cfg,
+        num_layers=2,
+        d_model=256,
+        n_heads=n_heads,
+        n_kv_heads=n_kv,
+        head_dim=64 if cfg.n_heads else 0,
+        d_ff=512 if cfg.d_ff else 0,
+        vocab_size=512,
+        vocab_pad_multiple=128,
+        n_experts=min(cfg.n_experts, 4),
+        moe_group_size=128,
+        ssm_head_dim=32 if cfg.ssm_state else 64,
+        ssm_state=min(cfg.ssm_state, 16) if cfg.ssm_state else 0,
+        ssm_chunk=32,
+        attn_every=2,
+        n_patches=16,
+        d_vision=64,
+        sliding_window=min(cfg.sliding_window, 64) if cfg.sliding_window else None,
+        serve_window=64,
+        remat=False,
+    )
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins; weak-type-correct, no allocation)
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_struct(cfg: ModelConfig, seq_len: int, batch: int, kind: str) -> dict:
+    """ShapeDtypeStructs for one model-input batch."""
+    i32 = jnp.int32
+    if kind in ("train", "prefill"):
+        if cfg.arch_type == "audio":
+            out = {"tokens": _sds((batch, seq_len, cfg.n_codebooks), i32)}
+            if kind == "train":
+                out["labels"] = _sds((batch, seq_len, cfg.n_codebooks), i32)
+            return out
+        if cfg.arch_type == "vlm":
+            s_txt = seq_len - cfg.n_patches
+            out = {
+                "tokens": _sds((batch, s_txt), i32),
+                "vision": _sds((batch, cfg.n_patches, cfg.d_vision), jnp.bfloat16),
+            }
+            if kind == "train":
+                out["labels"] = _sds((batch, s_txt), i32)
+            return out
+        out = {"tokens": _sds((batch, seq_len), i32)}
+        if kind == "train":
+            out["labels"] = _sds((batch, seq_len), i32)
+        return out
+    if kind == "decode":
+        if cfg.arch_type == "audio":
+            return {"tokens": _sds((batch, 1, cfg.n_codebooks), i32)}
+        return {"tokens": _sds((batch, 1), i32)}
+    raise ValueError(kind)
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> dict:
+    """Everything the lowered step function consumes besides params/opt-state."""
+    out = {"batch": batch_struct(cfg, shape.seq_len, shape.global_batch, shape.kind)}
+    if shape.kind == "decode":
+        out["pos"] = _sds((shape.global_batch,), jnp.int32)
+        out["cache"] = jax.eval_shape(
+            lambda: init_cache(cfg, shape.global_batch, shape.seq_len))
+    return out
+
+
+def make_batch(cfg: ModelConfig, seq_len: int, batch: int, kind: str, seed: int = 0) -> dict:
+    """Concrete random batch (for smoke tests / examples on CPU)."""
+    structs = batch_struct(cfg, seq_len, batch, kind)
+    key = jax.random.key(seed)
+    out = {}
+    for name, s in structs.items():
+        key, sub = jax.random.split(key)
+        if jnp.issubdtype(s.dtype, jnp.integer):
+            out[name] = jax.random.randint(sub, s.shape, 0, cfg.vocab_size, s.dtype)
+        else:
+            out[name] = jax.random.normal(sub, s.shape, jnp.float32).astype(s.dtype)
+    return out

@@ -1,0 +1,251 @@
+"""ALS: Active Learning-based Sampling (paper §5.3, Alg. 2).
+
+Greedy Sampling on the output (GSy): an NN predictor, trained on profiled
+modes, guides *which* modes to profile next — those on the predicted Pareto
+whose predicted power is farthest from already-profiled powers (max power
+diversity). Crucially the NN never answers the optimization query: only the
+**observed** partial Pareto does, so ALS cannot violate budgets through
+prediction error (§5.3.1).
+
+ * training:   10 random init + 8 rounds x 5 greedy samples  (<= 50 modes)
+ * inference:  25 init (5 per bs) + 6 rounds x 4 quadrants x 5 (<= 145)
+ * concurrent: 25 init + 3 rounds x 4 quadrants x 10           (<= 145)
+"""
+from __future__ import annotations
+
+import dataclasses
+import random
+from typing import Optional
+
+import numpy as np
+
+from repro.core import problem as P
+from repro.core.device_model import Profiler
+from repro.core.gmd import ConcurrentProfiler
+from repro.core.nn_model import NNPredictor, mode_features
+from repro.core.pareto import pareto_front
+from repro.core.powermode import PowerMode, PowerModeSpace
+
+
+def _greedy_power_diverse(cand_powers: dict, seen_powers: list[float], k: int) -> list:
+    """Pick k candidates maximizing min |predicted power - profiled powers|."""
+    seen = list(seen_powers)
+    picked = []
+    cands = dict(cand_powers)
+    for _ in range(min(k, len(cands))):
+        key = max(cands, key=lambda c: min((abs(cands[c] - s) for s in seen),
+                                           default=float("inf")))
+        picked.append(key)
+        seen.append(cands[key])
+        del cands[key]
+    return picked
+
+
+class ALSTrain:
+    def __init__(self, profiler: Profiler, space: Optional[PowerModeSpace] = None,
+                 rounds: int = 8, init_samples: int = 10, per_round: int = 5,
+                 nn_epochs: int = 400, seed: int = 0):
+        self.profiler = profiler
+        self.space = space or PowerModeSpace()
+        self.rounds, self.init_samples, self.per_round = rounds, init_samples, per_round
+        self.nn_epochs = nn_epochs
+        self.seed = seed
+        self._fitted = False
+
+    def fit(self) -> None:
+        """Sample + profile; reusable for any problem config of this workload."""
+        rng = random.Random(self.seed)
+        modes = self.space.all_modes()
+        train_set = rng.sample(modes, self.init_samples)
+        for pm in train_set:
+            self.profiler.profile(pm)
+
+        for rnd in range(self.rounds):
+            obs = self.profiler.observed()
+            feats = np.array([mode_features(pm) for (pm, _) in obs])
+            times = np.array([t for (t, _) in obs.values()])
+            pows = np.array([p for (_, p) in obs.values()])
+            nn_t = NNPredictor.fit(feats, times, epochs=self.nn_epochs, seed=rnd)
+            nn_p = NNPredictor.fit(feats, pows, epochs=self.nn_epochs, seed=rnd + 100)
+
+            test = [pm for pm in modes if (pm, None) not in obs]
+            if not test:
+                break
+            tf = np.array([mode_features(pm) for pm in test])
+            pred_t = nn_t.predict(tf)
+            pred_p = nn_p.predict(tf)
+            points = {pm: (float(pp), float(tt))
+                      for pm, pp, tt in zip(test, pred_p, pred_t)}
+            front = pareto_front(points)               # predicted Pareto
+            cand_powers = {pm: pw for pm, (pw, _) in front.items()}
+            seen_powers = [p for (_, p) in obs.values()]
+            for pm in _greedy_power_diverse(cand_powers, seen_powers, self.per_round):
+                self.profiler.profile(pm)
+        self._fitted = True
+
+    def solve(self, prob: P.TrainProblem) -> Optional[P.Solution]:
+        if not self._fitted:
+            self.fit()
+        obs = {pm: tp for (pm, _), tp in self.profiler.observed().items()}
+        return P.solve_train(prob, obs)
+
+
+# ---------------------------------------------------------------------------
+# inference: 4-quadrant sampling over (latency budget, arrival rate)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class QuadrantRanges:
+    latency: tuple[float, float]        # full (lo, hi) range of budgets
+    arrival: tuple[float, float]
+
+    def quadrants(self):
+        lmid = 0.5 * (self.latency[0] + self.latency[1])
+        amid = 0.5 * (self.arrival[0] + self.arrival[1])
+        for lat in ((self.latency[0], lmid), (lmid, self.latency[1])):
+            for arr in ((self.arrival[0], amid), (amid, self.arrival[1])):
+                yield lat, arr
+
+
+class ALSInfer:
+    def __init__(self, profiler: Profiler, ranges: QuadrantRanges,
+                 space: Optional[PowerModeSpace] = None,
+                 rounds: int = 6, init_per_bs: int = 5, per_quadrant: int = 5,
+                 nn_epochs: int = 400, seed: int = 0,
+                 batch_sizes=tuple(P.INFER_BATCH_SIZES)):
+        self.profiler = profiler
+        self.ranges = ranges
+        self.space = space or PowerModeSpace()
+        self.rounds, self.init_per_bs, self.per_quadrant = rounds, init_per_bs, per_quadrant
+        self.nn_epochs = nn_epochs
+        self.seed = seed
+        self.batch_sizes = list(batch_sizes)
+        self._fitted = False
+
+    def _predictors(self):
+        obs = self.profiler.observed()
+        feats = np.array([mode_features(pm, bs) for (pm, bs) in obs])
+        times = np.array([t for (t, _) in obs.values()])
+        pows = np.array([p for (_, p) in obs.values()])
+        nn_t = NNPredictor.fit(feats, times, epochs=self.nn_epochs)
+        nn_p = NNPredictor.fit(feats, pows, epochs=self.nn_epochs, seed=1)
+        return nn_t, nn_p
+
+    def fit(self) -> None:
+        rng = random.Random(self.seed)
+        modes = self.space.all_modes()
+        for bs in self.batch_sizes:
+            for pm in rng.sample(modes, self.init_per_bs):
+                self.profiler.profile(pm, bs)
+
+        for rnd in range(self.rounds):
+            nn_t, nn_p = self._predictors()
+            obs = self.profiler.observed()
+            test = [(pm, bs) for pm in modes for bs in self.batch_sizes
+                    if (pm, bs) not in obs]
+            if not test:
+                break
+            tf = np.array([mode_features(pm, bs) for pm, bs in test])
+            pred_t, pred_p = nn_t.predict(tf), nn_p.predict(tf)
+            seen_powers = [p for (_, p) in obs.values()]
+
+            for lat_rng, arr_rng in self.ranges.quadrants():
+                # conservative pruning: keep candidates meeting the quadrant's
+                # peak latency and its lowest arrival rate (§5.3.3)
+                keep = {}
+                for (pm, bs), tt, pp in zip(test, pred_t, pred_p):
+                    lam = P.peak_latency(bs, arr_rng[0], float(tt))
+                    if lam <= lat_rng[1] and P.sustainable(bs, arr_rng[0], float(tt)):
+                        keep[(pm, bs)] = (float(pp), lam)
+                if not keep:
+                    continue
+                front = pareto_front(keep)
+                cand_powers = {k: pw for k, (pw, _) in front.items()}
+                for pm, bs in _greedy_power_diverse(cand_powers, seen_powers,
+                                                    self.per_quadrant):
+                    self.profiler.profile(pm, bs)
+                    seen_powers.append(self.profiler.observed()[(pm, bs)][1])
+        self._fitted = True
+
+    def solve(self, prob: P.InferProblem) -> Optional[P.Solution]:
+        if not self._fitted:
+            self.fit()
+        return P.solve_infer(prob, self.profiler.observed())
+
+
+# ---------------------------------------------------------------------------
+# concurrent training + inference
+# ---------------------------------------------------------------------------
+
+class ALSConcurrent:
+    def __init__(self, cprofiler: ConcurrentProfiler, ranges: QuadrantRanges,
+                 space: Optional[PowerModeSpace] = None,
+                 rounds: int = 3, init_modes: int = 25, per_quadrant: int = 10,
+                 nn_epochs: int = 400, seed: int = 0,
+                 batch_sizes=tuple(P.INFER_BATCH_SIZES)):
+        self.cp = cprofiler
+        self.ranges = ranges
+        self.space = space or PowerModeSpace()
+        self.rounds, self.init_modes, self.per_quadrant = rounds, init_modes, per_quadrant
+        self.nn_epochs = nn_epochs
+        self.seed = seed
+        self.batch_sizes = list(batch_sizes)
+        self._fitted = False
+
+    def fit(self) -> None:
+        rng = random.Random(self.seed)
+        modes = self.space.all_modes()
+        for pm in rng.sample(modes, self.init_modes):
+            self.cp.profile(pm, rng.choice(self.batch_sizes))
+
+        for rnd in range(self.rounds):
+            iobs = self.cp.infer.observed()
+            tobs = self.cp.train.observed()
+            ifeats = np.array([mode_features(pm, bs) for (pm, bs) in iobs])
+            nn_ti = NNPredictor.fit(ifeats, np.array([t for t, _ in iobs.values()]),
+                                    epochs=self.nn_epochs)
+            nn_pi = NNPredictor.fit(ifeats, np.array([p for _, p in iobs.values()]),
+                                    epochs=self.nn_epochs, seed=1)
+            tfeats = np.array([mode_features(pm) for (pm, _) in tobs])
+            nn_tt = NNPredictor.fit(tfeats, np.array([t for t, _ in tobs.values()]),
+                                    epochs=self.nn_epochs, seed=2)
+            nn_pt = NNPredictor.fit(tfeats, np.array([p for _, p in tobs.values()]),
+                                    epochs=self.nn_epochs, seed=3)
+
+            test = [(pm, bs) for pm in modes for bs in self.batch_sizes
+                    if (pm, bs) not in iobs]
+            if not test:
+                break
+            itf = np.array([mode_features(pm, bs) for pm, bs in test])
+            ttf = np.array([mode_features(pm) for pm, _ in test])
+            p_ti, p_pi = nn_ti.predict(itf), nn_pi.predict(itf)
+            p_tt, p_pt = nn_tt.predict(ttf), nn_pt.predict(ttf)
+            seen_powers = [p for (_, p) in iobs.values()] + \
+                          [p for (_, p) in tobs.values()]
+
+            for lat_rng, arr_rng in self.ranges.quadrants():
+                keep = {}
+                for (pmbs, tti, ppi, ttt, ppt) in zip(test, p_ti, p_pi, p_tt, p_pt):
+                    pm, bs = pmbs
+                    lam = P.peak_latency(bs, arr_rng[0], float(tti))
+                    if lam > lat_rng[1] or not P.sustainable(bs, arr_rng[0], float(tti)):
+                        continue
+                    theta = P.train_throughput(bs, arr_rng[0], float(tti), max(float(ttt), 1e-6))
+                    dom_p = max(float(ppi), float(ppt))   # dominant power
+                    keep[(pm, bs)] = (dom_p, theta)
+                if not keep:
+                    continue
+                # Pareto of predicted throughput (higher better) vs power
+                front = pareto_front(keep, lower_is_better=False)
+                cand_powers = {k: pw for k, (pw, _) in front.items()}
+                for pm, bs in _greedy_power_diverse(cand_powers, seen_powers,
+                                                    self.per_quadrant):
+                    self.cp.profile(pm, bs)
+                    seen_powers.append(self.cp.infer.observed()[(pm, bs)][1])
+        self._fitted = True
+
+    def solve(self, prob: P.ConcurrentProblem) -> Optional[P.Solution]:
+        if not self._fitted:
+            self.fit()
+        return P.solve_concurrent(prob, self.cp.train.observed_modes(),
+                                  self.cp.infer.observed())

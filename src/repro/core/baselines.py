@@ -1,0 +1,198 @@
+"""Baseline strategies (paper §6): RND-k random sampling with observed-Pareto
+lookup, and the NN-k prediction-based baseline (PowerTrain-style) whose
+*predicted* Pareto answers queries — and can therefore violate budgets."""
+from __future__ import annotations
+
+import random
+from typing import Optional
+
+import numpy as np
+
+from repro.core import problem as P
+from repro.core.device_model import Profiler
+from repro.core.gmd import ConcurrentProfiler
+from repro.core.nn_model import NNPredictor, mode_features
+from repro.core.powermode import PowerModeSpace
+
+
+class RNDTrain:
+    """RND-k: profile k random modes, answer from the observed profiles."""
+
+    def __init__(self, profiler: Profiler, k: int, space=None, seed: int = 0):
+        self.profiler, self.k = profiler, k
+        self.space = space or PowerModeSpace()
+        self.seed = seed
+        self._fitted = False
+
+    def fit(self):
+        rng = random.Random(self.seed)
+        for pm in rng.sample(self.space.all_modes(), self.k):
+            self.profiler.profile(pm)
+        self._fitted = True
+
+    def solve(self, prob: P.TrainProblem) -> Optional[P.Solution]:
+        if not self._fitted:
+            self.fit()
+        obs = {pm: tp for (pm, _), tp in self.profiler.observed().items()}
+        return P.solve_train(prob, obs)
+
+
+class RNDInfer:
+    """RND-150/250: k//5 random modes, each profiled at all 5 batch sizes."""
+
+    def __init__(self, profiler: Profiler, k: int, space=None, seed: int = 0,
+                 batch_sizes=tuple(P.INFER_BATCH_SIZES)):
+        self.profiler, self.k = profiler, k
+        self.space = space or PowerModeSpace()
+        self.seed = seed
+        self.batch_sizes = list(batch_sizes)
+        self._fitted = False
+
+    def fit(self):
+        rng = random.Random(self.seed)
+        n_modes = max(1, self.k // len(self.batch_sizes))
+        for pm in rng.sample(self.space.all_modes(), n_modes):
+            for bs in self.batch_sizes:
+                self.profiler.profile(pm, bs)
+        self._fitted = True
+
+    def solve(self, prob: P.InferProblem) -> Optional[P.Solution]:
+        if not self._fitted:
+            self.fit()
+        return P.solve_infer(prob, self.profiler.observed())
+
+
+class RNDConcurrent:
+    def __init__(self, cprofiler: ConcurrentProfiler, k: int, space=None,
+                 seed: int = 0, batch_sizes=tuple(P.INFER_BATCH_SIZES)):
+        self.cp, self.k = cprofiler, k
+        self.space = space or PowerModeSpace()
+        self.seed = seed
+        self.batch_sizes = list(batch_sizes)
+        self._fitted = False
+
+    def fit(self):
+        rng = random.Random(self.seed)
+        n_modes = max(1, self.k // len(self.batch_sizes))
+        for pm in rng.sample(self.space.all_modes(), n_modes):
+            for bs in self.batch_sizes:
+                self.cp.profile(pm, bs)
+        self._fitted = True
+
+    def solve(self, prob: P.ConcurrentProblem) -> Optional[P.Solution]:
+        if not self._fitted:
+            self.fit()
+        return P.solve_concurrent(prob, self.cp.train.observed_modes(),
+                                  self.cp.infer.observed())
+
+
+# ---------------------------------------------------------------------------
+# NN-k: prediction-based (the paper's cautionary baseline)
+# ---------------------------------------------------------------------------
+
+class NNTrainBaseline:
+    def __init__(self, profiler: Profiler, k: int = 250, space=None,
+                 seed: int = 0, nn_epochs: int = 1000):
+        self.profiler, self.k = profiler, k
+        self.space = space or PowerModeSpace()
+        self.seed, self.nn_epochs = seed, nn_epochs
+        self._pred = None
+
+    def fit(self):
+        rng = random.Random(self.seed)
+        for pm in rng.sample(self.space.all_modes(), self.k):
+            self.profiler.profile(pm)
+        obs = self.profiler.observed()
+        feats = np.array([mode_features(pm) for (pm, _) in obs])
+        nn_t = NNPredictor.fit(feats, np.array([t for t, _ in obs.values()]),
+                               epochs=self.nn_epochs)
+        nn_p = NNPredictor.fit(feats, np.array([p for _, p in obs.values()]),
+                               epochs=self.nn_epochs, seed=1)
+        modes = self.space.all_modes()
+        mf = np.array([mode_features(pm) for pm in modes])
+        self._pred = {pm: (float(t), float(p))
+                      for pm, t, p in zip(modes, nn_t.predict(mf), nn_p.predict(mf))}
+
+    def solve(self, prob: P.TrainProblem) -> Optional[P.Solution]:
+        """Answers from *predicted* values; the returned solution's true
+        time/power may violate the budget (evaluated by the benchmark)."""
+        if self._pred is None:
+            self.fit()
+        return P.solve_train(prob, self._pred)
+
+
+class NNInferBaseline:
+    def __init__(self, profiler: Profiler, k: int = 250, space=None,
+                 seed: int = 0, nn_epochs: int = 1000,
+                 batch_sizes=tuple(P.INFER_BATCH_SIZES)):
+        self.profiler, self.k = profiler, k
+        self.space = space or PowerModeSpace()
+        self.seed, self.nn_epochs = seed, nn_epochs
+        self.batch_sizes = list(batch_sizes)
+        self._pred = None
+
+    def fit(self):
+        rng = random.Random(self.seed)
+        n_modes = max(1, self.k // len(self.batch_sizes))
+        for pm in rng.sample(self.space.all_modes(), n_modes):
+            for bs in self.batch_sizes:
+                self.profiler.profile(pm, bs)
+        obs = self.profiler.observed()
+        feats = np.array([mode_features(pm, bs) for (pm, bs) in obs])
+        nn_t = NNPredictor.fit(feats, np.array([t for t, _ in obs.values()]),
+                               epochs=self.nn_epochs)
+        nn_p = NNPredictor.fit(feats, np.array([p for _, p in obs.values()]),
+                               epochs=self.nn_epochs, seed=1)
+        keys = [(pm, bs) for pm in self.space.all_modes() for bs in self.batch_sizes]
+        mf = np.array([mode_features(pm, bs) for pm, bs in keys])
+        self._pred = {k: (float(t), float(p))
+                      for k, t, p in zip(keys, nn_t.predict(mf), nn_p.predict(mf))}
+
+    def solve(self, prob: P.InferProblem) -> Optional[P.Solution]:
+        if self._pred is None:
+            self.fit()
+        return P.solve_infer(prob, self._pred)
+
+
+class NNConcurrentBaseline:
+    def __init__(self, cprofiler: ConcurrentProfiler, k: int = 250, space=None,
+                 seed: int = 0, nn_epochs: int = 1000,
+                 batch_sizes=tuple(P.INFER_BATCH_SIZES)):
+        self.cp, self.k = cprofiler, k
+        self.space = space or PowerModeSpace()
+        self.seed, self.nn_epochs = seed, nn_epochs
+        self.batch_sizes = list(batch_sizes)
+        self._pred = None
+
+    def fit(self):
+        rng = random.Random(self.seed)
+        n_modes = max(1, self.k // len(self.batch_sizes))
+        for pm in rng.sample(self.space.all_modes(), n_modes):
+            for bs in self.batch_sizes:
+                self.cp.profile(pm, bs)
+        iobs = self.cp.infer.observed()
+        tobs = self.cp.train.observed()
+        ifeats = np.array([mode_features(pm, bs) for (pm, bs) in iobs])
+        nn_ti = NNPredictor.fit(ifeats, np.array([t for t, _ in iobs.values()]),
+                                epochs=self.nn_epochs)
+        nn_pi = NNPredictor.fit(ifeats, np.array([p for _, p in iobs.values()]),
+                                epochs=self.nn_epochs, seed=1)
+        tfeats = np.array([mode_features(pm) for (pm, _) in tobs])
+        nn_tt = NNPredictor.fit(tfeats, np.array([t for t, _ in tobs.values()]),
+                                epochs=self.nn_epochs, seed=2)
+        nn_pt = NNPredictor.fit(tfeats, np.array([p for _, p in tobs.values()]),
+                                epochs=self.nn_epochs, seed=3)
+        modes = self.space.all_modes()
+        keys = [(pm, bs) for pm in modes for bs in self.batch_sizes]
+        imf = np.array([mode_features(pm, bs) for pm, bs in keys])
+        tmf = np.array([mode_features(pm) for pm in modes])
+        self._ipred = {k: (float(t), float(p)) for k, t, p in
+                       zip(keys, nn_ti.predict(imf), nn_pi.predict(imf))}
+        self._tpred = {pm: (float(t), float(p)) for pm, t, p in
+                       zip(modes, nn_tt.predict(tmf), nn_pt.predict(tmf))}
+        self._pred = True
+
+    def solve(self, prob: P.ConcurrentProblem) -> Optional[P.Solution]:
+        if self._pred is None:
+            self.fit()
+        return P.solve_concurrent(prob, self._tpred, self._ipred)

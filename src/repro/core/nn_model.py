@@ -1,0 +1,92 @@
+"""NN time/power predictor (paper §5.2, after PowerTrain [31]).
+
+4 dense layers (256/128/64/1), ReLU + linear head, Adam @ 1e-3, and a custom
+MAPE loss that penalizes under-predictions 4x (under-predicted power causes
+budget violations). Inputs are standardized [cores, cpuf, gpuf, memf (, bs)].
+Pure JAX; training is a lax.scan over full-batch Adam steps.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+LAYERS = (256, 128, 64, 1)
+UNDER_PENALTY = 4.0
+
+
+def _init_params(key, d_in: int):
+    params = []
+    dims = (d_in,) + LAYERS
+    for i in range(len(LAYERS)):
+        key, sub = jax.random.split(key)
+        w = jax.random.normal(sub, (dims[i], dims[i + 1])) * jnp.sqrt(2.0 / dims[i])
+        params.append({"w": w, "b": jnp.zeros((dims[i + 1],))})
+    return params
+
+
+def _apply(params, x):
+    for i, layer in enumerate(params):
+        x = x @ layer["w"] + layer["b"]
+        if i < len(params) - 1:
+            x = jax.nn.relu(x)
+    return x[..., 0]
+
+
+def _loss(params, x, y):
+    pred = _apply(params, x)
+    err = (pred - y) / jnp.maximum(jnp.abs(y), 1e-6)
+    w = jnp.where(err < 0, UNDER_PENALTY, 1.0)     # under-prediction penalized
+    return jnp.mean(w * jnp.abs(err))
+
+
+@dataclasses.dataclass
+class NNPredictor:
+    params: list
+    mean: jnp.ndarray
+    std: jnp.ndarray
+
+    @classmethod
+    def fit(cls, features: np.ndarray, targets: np.ndarray, *,
+            epochs: int = 1000, lr: float = 1e-3, seed: int = 0) -> "NNPredictor":
+        x = jnp.asarray(features, jnp.float32)
+        y = jnp.asarray(targets, jnp.float32)
+        mean = x.mean(0)
+        std = jnp.maximum(x.std(0), 1e-6)
+        xn = (x - mean) / std
+        params = _init_params(jax.random.key(seed), x.shape[1])
+        m = jax.tree.map(jnp.zeros_like, params)
+        v = jax.tree.map(jnp.zeros_like, params)
+
+        def step(carry, i):
+            params, m, v = carry
+            g = jax.grad(_loss)(params, xn, y)
+            m = jax.tree.map(lambda a, b: 0.9 * a + 0.1 * b, m, g)
+            v = jax.tree.map(lambda a, b: 0.999 * a + 0.001 * jnp.square(b), v, g)
+            t = i.astype(jnp.float32) + 1
+            mh = jax.tree.map(lambda a: a / (1 - 0.9 ** t), m)
+            vh = jax.tree.map(lambda a: a / (1 - 0.999 ** t), v)
+            params = jax.tree.map(
+                lambda p, a, b: p - lr * a / (jnp.sqrt(b) + 1e-8), params, mh, vh)
+            return (params, m, v), None
+
+        (params, _, _), _ = jax.lax.scan(step, (params, m, v), jnp.arange(epochs))
+        return cls(params=params, mean=mean, std=std)
+
+    def predict(self, features: np.ndarray) -> np.ndarray:
+        x = (jnp.asarray(features, jnp.float32) - self.mean) / self.std
+        return np.asarray(_apply(self.params, x))
+
+    def mape(self, features: np.ndarray, targets: np.ndarray) -> float:
+        pred = self.predict(features)
+        return float(np.mean(np.abs(pred - targets) / np.maximum(np.abs(targets), 1e-6)))
+
+
+def mode_features(pm, bs: Optional[int] = None) -> list[float]:
+    f = [float(pm.cores), float(pm.cpuf), float(pm.gpuf), float(pm.memf)]
+    if bs is not None:
+        f.append(float(bs))
+    return f

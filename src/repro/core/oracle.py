@@ -1,0 +1,46 @@
+"""Ground-truth "optimal" solutions (paper §6): exhaustively evaluate the 441
+uniformly spaced power modes (x 5 inference minibatch sizes) on the device
+model and solve by observed-Pareto lookup. Profiling cost is not charged to
+the oracle — it is the nominal optimum strategies are compared against."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+from repro.core import problem as P
+from repro.core.device_model import DeviceModel, WorkloadProfile
+from repro.core.powermode import PowerMode, PowerModeSpace
+
+
+class Oracle:
+    def __init__(self, device: DeviceModel, space: Optional[PowerModeSpace] = None,
+                 batch_sizes=tuple(P.INFER_BATCH_SIZES)):
+        self.device = device
+        self.space = space or PowerModeSpace()
+        self.batch_sizes = batch_sizes
+        self._train_obs: dict[str, dict] = {}
+        self._infer_obs: dict[str, dict] = {}
+
+    def train_observations(self, w: WorkloadProfile) -> dict:
+        if w.name not in self._train_obs:
+            self._train_obs[w.name] = {
+                pm: self.device.time_power(w, pm) for pm in self.space.all_modes()}
+        return self._train_obs[w.name]
+
+    def infer_observations(self, w: WorkloadProfile) -> dict:
+        if w.name not in self._infer_obs:
+            self._infer_obs[w.name] = {
+                (pm, bs): self.device.time_power(w, pm, bs)
+                for pm in self.space.all_modes() for bs in self.batch_sizes}
+        return self._infer_obs[w.name]
+
+    def solve_train(self, w: WorkloadProfile, prob: P.TrainProblem):
+        return P.solve_train(prob, self.train_observations(w))
+
+    def solve_infer(self, w: WorkloadProfile, prob: P.InferProblem):
+        return P.solve_infer(prob, self.infer_observations(w))
+
+    def solve_concurrent(self, w_tr: WorkloadProfile, w_in: WorkloadProfile,
+                         prob: P.ConcurrentProblem):
+        return P.solve_concurrent(prob, self.train_observations(w_tr),
+                                  self.infer_observations(w_in))

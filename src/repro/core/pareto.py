@@ -1,0 +1,35 @@
+"""Pareto-front utilities over (power, time) trade-off points."""
+from __future__ import annotations
+
+from typing import Callable, Hashable, Iterable, Sequence
+
+
+def pareto_front(points: dict, lower_is_better: bool = True) -> dict:
+    """points: {key: (power, objective)}. Returns the subset on the Pareto
+    front: least objective for any power (and vice versa). For objectives
+    where higher is better (throughput), pass lower_is_better=False."""
+    sign = 1.0 if lower_is_better else -1.0
+    items = sorted(points.items(), key=lambda kv: (kv[1][0], sign * kv[1][1]))
+    front: dict = {}
+    best = float("inf")
+    for key, (p, obj) in items:
+        o = sign * obj
+        if o < best:
+            front[key] = (p, obj)
+            best = o
+    return front
+
+
+def on_front(points: dict, key: Hashable, lower_is_better: bool = True) -> bool:
+    return key in pareto_front(points, lower_is_better)
+
+
+def front_lookup(front: dict, power_budget: float,
+                 lower_is_better: bool = True):
+    """Best front entry with power <= budget. Returns (key, (p, obj)) or None."""
+    sign = 1.0 if lower_is_better else -1.0
+    best = None
+    for key, (p, obj) in front.items():
+        if p <= power_budget and (best is None or sign * obj < sign * best[1][1]):
+            best = (key, (p, obj))
+    return best

@@ -1,0 +1,132 @@
+"""Problem formulation (§4): the three optimization variants, the managed-
+interleaving feasibility math, and the observed-profile solver every strategy
+(oracle, RND, ALS, GMD backtracking) shares.
+
+Notation follows Table 2: a solution is (pm [, beta_in [, tau_tr]]).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+from repro.core.powermode import PowerMode
+
+INFER_BATCH_SIZES = [1, 4, 16, 32, 64]   # paper §6 (BERT capped at 32)
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainProblem:
+    power_budget: float                       # p-hat (W)
+
+
+@dataclasses.dataclass(frozen=True)
+class InferProblem:
+    power_budget: float
+    latency_budget: float                     # lambda-hat (s/request, peak)
+    arrival_rate: float                       # alpha (requests/s)
+
+
+@dataclasses.dataclass(frozen=True)
+class ConcurrentProblem:
+    power_budget: float
+    latency_budget: float
+    arrival_rate: float
+
+
+@dataclasses.dataclass(frozen=True)
+class Solution:
+    pm: PowerMode
+    bs: Optional[int] = None
+    tau_tr: Optional[int] = None
+    # achieved metrics (as observed/predicted by the solving strategy)
+    time: float = 0.0            # train minibatch time or inference latency
+    power: float = 0.0
+    throughput: float = 0.0      # training minibatches/s (concurrent)
+
+
+# ---------------------------------------------------------------------------
+# managed-interleaving math (§4, Fig. 3/4)
+# ---------------------------------------------------------------------------
+
+def queueing_time(bs: int, arrival_rate: float) -> float:
+    return (bs - 1) / arrival_rate
+
+
+def peak_latency(bs: int, arrival_rate: float, t_in: float) -> float:
+    """lambda_in = (beta-1)/alpha + t_in."""
+    return queueing_time(bs, arrival_rate) + t_in
+
+
+def sustainable(bs: int, arrival_rate: float, t_in: float) -> bool:
+    """Inference rate keeps up with arrival rate (Fig. 3b): processing one
+    minibatch must not take longer than it takes the next one to queue up."""
+    return t_in <= bs / arrival_rate
+
+
+def interleave_tau(bs: int, arrival_rate: float, t_in: float, t_tr: float) -> int:
+    """Integral number of training minibatches per inference cycle."""
+    slack = bs / arrival_rate - t_in
+    return max(0, int(math.floor(slack / t_tr)))
+
+
+def train_throughput(bs: int, arrival_rate: float, t_in: float, t_tr: float) -> float:
+    """theta_tr under managed interleaving (train minibatches / s)."""
+    tau = interleave_tau(bs, arrival_rate, t_in, t_tr)
+    return tau / (bs / arrival_rate)
+
+
+# ---------------------------------------------------------------------------
+# observed-profile solvers
+# observations: {pm: (t, p)} for training; {(pm, bs): (t, p)} for inference.
+# concurrent: train_obs {pm: (t,p)} + infer_obs {(pm,bs): (t,p)}
+# ---------------------------------------------------------------------------
+
+def solve_train(problem: TrainProblem, obs: dict) -> Optional[Solution]:
+    """arg max theta_tr  s.t.  p_tr <= p-hat."""
+    best = None
+    for pm, (t, p) in obs.items():
+        if p <= problem.power_budget and (best is None or t < best.time):
+            best = Solution(pm=pm, time=t, power=p, throughput=1.0 / t)
+    return best
+
+
+def solve_infer(problem: InferProblem, obs: dict) -> Optional[Solution]:
+    """arg min lambda_in  s.t.  lambda <= budget, p <= budget, sustainable."""
+    best = None
+    for (pm, bs), (t, p) in obs.items():
+        if p > problem.power_budget:
+            continue
+        if not sustainable(bs, problem.arrival_rate, t):
+            continue
+        lam = peak_latency(bs, problem.arrival_rate, t)
+        if lam > problem.latency_budget:
+            continue
+        if best is None or lam < best.time:
+            best = Solution(pm=pm, bs=bs, time=lam, power=p)
+    return best
+
+
+def solve_concurrent(problem: ConcurrentProblem, train_obs: dict,
+                     infer_obs: dict) -> Optional[Solution]:
+    """Primary: arg max theta_tr s.t. lambda <= budget and max(p) <= budget.
+    Secondary: arg min lambda_in."""
+    best = None
+    for (pm, bs), (t_in, p_in) in infer_obs.items():
+        if pm not in train_obs:
+            continue
+        t_tr, p_tr = train_obs[pm]
+        p = max(p_in, p_tr)
+        if p > problem.power_budget:
+            continue
+        if not sustainable(bs, problem.arrival_rate, t_in):
+            continue
+        lam = peak_latency(bs, problem.arrival_rate, t_in)
+        if lam > problem.latency_budget:
+            continue
+        tau = interleave_tau(bs, problem.arrival_rate, t_in, t_tr)
+        theta = tau / (bs / problem.arrival_rate)
+        cand = Solution(pm=pm, bs=bs, tau_tr=tau, time=lam, power=p, throughput=theta)
+        if best is None or (cand.throughput, -cand.time) > (best.throughput, -best.time):
+            best = cand
+    return best

@@ -1,0 +1,161 @@
+"""Fulcrum: the top-level scheduler (paper Fig. 5).
+
+Given a workload (train / infer / concurrent pair / concurrent-inference
+pair), a problem configuration, and a strategy name, Fulcrum profiles via the
+chosen strategy, commits to a (power mode, beta_in, tau_tr) plan, and executes
+it with managed interleaving. Also supports dynamic arrival rates (§5.4):
+profiled modes are reused; GMD only backtracks to a different bs when the new
+rate invalidates the current plan.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.core import problem as P
+from repro.core.als import ALSConcurrent, ALSInfer, ALSTrain, QuadrantRanges
+from repro.core.baselines import (NNConcurrentBaseline, NNInferBaseline,
+                                  NNTrainBaseline, RNDConcurrent, RNDInfer,
+                                  RNDTrain)
+from repro.core.device_model import DeviceModel, Profiler, WorkloadProfile
+from repro.core.gmd import ConcurrentProfiler, GMDConcurrent, GMDInfer, GMDTrain
+from repro.core.interleave import ExecutionReport, simulate_managed
+from repro.core.oracle import Oracle
+from repro.core.powermode import PowerModeSpace
+
+
+@dataclasses.dataclass
+class Plan:
+    solution: P.Solution
+    strategy: str
+    profiling_runs: int
+    profiling_cost_s: float
+
+
+class Fulcrum:
+    def __init__(self, device: Optional[DeviceModel] = None,
+                 space: Optional[PowerModeSpace] = None,
+                 quadrants: Optional[QuadrantRanges] = None,
+                 nn_epochs: int = 400):
+        self.device = device or DeviceModel()
+        self.space = space or PowerModeSpace()
+        self.quadrants = quadrants or QuadrantRanges(latency=(0.05, 2.0),
+                                                     arrival=(30.0, 120.0))
+        self.nn_epochs = nn_epochs
+        self.oracle = Oracle(self.device, self.space)
+        self._fitted: dict = {}     # reusable fitted strategies (ALS/RND/NN)
+
+    # -- strategy factories -------------------------------------------------
+    def _train_strategy(self, name: str, w: WorkloadProfile):
+        key = (name, w.name)
+        if name == "gmd":
+            return GMDTrain(Profiler(self.device, w), self.space)
+        if key not in self._fitted:
+            prof = Profiler(self.device, w)
+            self._fitted[key] = {
+                "als50": ALSTrain(prof, self.space, nn_epochs=self.nn_epochs),
+                "rnd50": RNDTrain(prof, 50, self.space),
+                "rnd250": RNDTrain(prof, 250, self.space),
+                "nn250": NNTrainBaseline(prof, 250, self.space,
+                                         nn_epochs=self.nn_epochs),
+            }[name]
+        return self._fitted[key]
+
+    def _infer_strategy(self, name: str, w: WorkloadProfile):
+        key = (name, w.name)
+        if name == "gmd":
+            return GMDInfer(Profiler(self.device, w), self.space)
+        if key not in self._fitted:
+            prof = Profiler(self.device, w)
+            self._fitted[key] = {
+                "als145": ALSInfer(prof, self.quadrants, self.space,
+                                   nn_epochs=self.nn_epochs),
+                "rnd150": RNDInfer(prof, 150, self.space),
+                "rnd250": RNDInfer(prof, 250, self.space),
+                "nn250": NNInferBaseline(prof, 250, self.space,
+                                         nn_epochs=self.nn_epochs),
+            }[name]
+        return self._fitted[key]
+
+    def _concurrent_strategy(self, name: str, w_tr, w_in):
+        key = (name, w_tr.name, w_in.name)
+        if name == "gmd":
+            cp = ConcurrentProfiler(Profiler(self.device, w_tr),
+                                    Profiler(self.device, w_in))
+            return GMDConcurrent(cp, self.space)
+        if key not in self._fitted:
+            cp = ConcurrentProfiler(Profiler(self.device, w_tr),
+                                    Profiler(self.device, w_in))
+            self._fitted[key] = {
+                "als145": ALSConcurrent(cp, self.quadrants, self.space,
+                                        nn_epochs=self.nn_epochs),
+                "rnd150": RNDConcurrent(cp, 150, self.space),
+                "rnd250": RNDConcurrent(cp, 250, self.space),
+                "nn250": NNConcurrentBaseline(cp, 250, self.space,
+                                              nn_epochs=self.nn_epochs),
+            }[name]
+        return self._fitted[key]
+
+    # -- solve --------------------------------------------------------------
+    def solve_train(self, w: WorkloadProfile, prob: P.TrainProblem,
+                    strategy: str = "gmd") -> Optional[Plan]:
+        s = self._train_strategy(strategy, w)
+        sol = s.solve(prob)
+        return self._plan(sol, s, strategy)
+
+    def solve_infer(self, w: WorkloadProfile, prob: P.InferProblem,
+                    strategy: str = "gmd") -> Optional[Plan]:
+        s = self._infer_strategy(strategy, w)
+        sol = s.solve(prob)
+        return self._plan(sol, s, strategy)
+
+    def solve_concurrent(self, w_tr: WorkloadProfile, w_in: WorkloadProfile,
+                         prob: P.ConcurrentProblem,
+                         strategy: str = "gmd") -> Optional[Plan]:
+        s = self._concurrent_strategy(strategy, w_tr, w_in)
+        sol = s.solve(prob)
+        return self._plan(sol, s, strategy)
+
+    def _plan(self, sol, strat, name) -> Optional[Plan]:
+        if sol is None:
+            return None
+        prof = getattr(strat, "profiler", None) or getattr(strat, "cp", None)
+        runs = prof.num_runs if prof is not None else 0
+        cost = prof.profile_cost_s if prof is not None else 0.0
+        return Plan(solution=sol, strategy=name, profiling_runs=runs,
+                    profiling_cost_s=cost)
+
+    # -- execute (managed interleaving over the device model) ---------------
+    def execute(self, plan: Plan, w_in: WorkloadProfile,
+                w_tr: Optional[WorkloadProfile], arrival_rate: float,
+                duration: float = 120.0) -> ExecutionReport:
+        sol = plan.solution
+        return simulate_managed(self.device, w_tr, w_in, sol.pm,
+                                sol.bs or 1, arrival_rate, duration)
+
+    # -- dynamic arrival rates (§5.4) ----------------------------------------
+    def solve_dynamic(self, w: WorkloadProfile, power_budget: float,
+                      latency_budget: float, rates: list[float],
+                      strategy: str = "gmd") -> list[Optional[P.Solution]]:
+        """One solution per rate window, reusing profiling history: GMD keeps
+        its profiler cache and only re-searches/backtracks when the existing
+        observations stop satisfying the new rate."""
+        sols: list[Optional[P.Solution]] = []
+        if strategy == "gmd":
+            # one shared profiler: cached profiles are free, so every window
+            # re-searches at full budget but mostly hits the cache; only
+            # genuinely new (pm, bs) profiles count against max_tries (§5.4)
+            prof = Profiler(self.device, w)
+            for rate in rates:
+                prob = P.InferProblem(power_budget, latency_budget, rate)
+                sol = P.solve_infer(prob, prof.observed())
+                if sol is None:
+                    GMDInfer(prof, self.space).solve(prob)
+                    sol = P.solve_infer(prob, prof.observed())
+                sols.append(sol)
+            return sols
+        for rate in rates:
+            prob = P.InferProblem(power_budget, latency_budget, rate)
+            plan = self.solve_infer(w, prob, strategy)
+            sols.append(plan.solution if plan else None)
+        return sols

@@ -1,0 +1,254 @@
+"""Beyond-paper: Fulcrum's GMD retargeted at TPU-pod configuration.
+
+There are no "power modes" on a TPU pod, but the paper's core insight — a
+profile-guided, slope-ratio-prioritized multi-dimensional bisection over a
+discrete knob space with a monotone resource constraint — transfers directly:
+
+  Jetson knob                  TPU knob
+  ---------------------------  ------------------------------------------
+  CPU cores / CPU / GPU / mem  data-parallel width (dp, chips/dp = tensor-
+  frequencies                  parallel width), microbatch count, remat
+  power budget  p <= p-hat     per-chip HBM bytes <= 16 GiB
+  minibatch time               roofline step time (compute+memory+coll.)
+  Profile(pm) on the board     analytic roofline model (or a dry-run
+                               lower+compile, ~seconds, on the real fleet)
+
+Monotone "power": HBM per chip strictly grows with dp (FSDP replication
+narrows), with fewer microbatches, and with remat off — so GMD's half-line
+pruning stays sound. Time is non-monotone across dims (the compute/collective
+trade), exactly like Jetson minibatch time; that is what the slope ratios
+navigate.
+
+This gives a scheduler that picks (dp, microbatch, remat) for any assigned
+architecture x input shape with ~10 "profiles", each of which on real
+hardware is one lower+compile dry-run instead of a 40-minibatch run.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+from repro.core import problem as P
+from repro.core.gmd import _GMDBase
+from repro.core.powermode import PowerModeSpace
+from repro.launch.mesh import HBM_BW, HBM_BYTES, ICI_BW, PEAK_FLOPS_BF16
+from repro.models.model import ModelConfig
+
+
+MAX_ACC = 16
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class TPUMode:
+    """One point in the TPU configuration space. Every dimension is ordered
+    so that a LARGER value uses MORE per-chip HBM — the monotone-"power"
+    property GMD's half-line pruning requires:
+
+    tp:    tensor/model-parallel width (data-parallel = chips // tp);
+           larger tp -> larger per-chip activation slice (batch shards less).
+    acc:   accumulation width; microbatches = MAX_ACC // acc, so larger acc
+           -> fewer microbatches -> bigger live activation working set.
+    remat: 0 = activation checkpointing ON, 1 = OFF (more HBM).
+    """
+    tp: int
+    acc: int
+    remat: int
+
+    @property
+    def microbatches(self) -> int:
+        return MAX_ACC // self.acc
+
+    def value(self, dim: str) -> int:
+        return getattr(self, dim)
+
+    def replace(self, **kw) -> "TPUMode":
+        return dataclasses.replace(self, **kw)
+
+    def __str__(self):
+        return (f"tp{self.tp}/mb{self.microbatches}/"
+                f"remat{'off' if self.remat else 'on'}")
+
+
+class TPUKnobSpace(PowerModeSpace):
+    MODE_CLS = TPUMode
+
+    def __init__(self, chips: int = 256,
+                 tp=(4, 8, 16, 32, 64),
+                 acc=(1, 2, 4, 8, 16), remat=(0, 1)):
+        self.chips = chips
+        self.values = {"tp": sorted(tp), "acc": sorted(acc),
+                       "remat": sorted(remat)}
+
+    def make_mode(self, **kw):
+        return TPUMode(**kw)
+
+
+class RooflineTPUModel:
+    """Analytic per-step roofline of (arch x shape) under a TPU config.
+
+    time  = compute + exposed-memory + collective terms (same three-term
+            decomposition as EXPERIMENTS.md §Roofline)
+    "power" = per-chip HBM bytes (params/optimizer/activations/cache).
+    On real hardware this is replaced by a lower+compile dry-run profile.
+    """
+
+    def __init__(self, cfg: ModelConfig, seq_len: int, global_batch: int,
+                 kind: str = "train", chips: int = 256):
+        self.cfg, self.seq, self.batch, self.kind = cfg, seq_len, global_batch, kind
+        self.chips = chips
+
+    def time_power(self, m: TPUMode) -> tuple[float, float]:
+        cfg = self.cfg
+        tp = m.tp
+        dp = max(1, self.chips // tp)
+        micro = m.microbatches
+        tokens = self.batch * self.seq
+        n_active = cfg.active_param_count()
+        n_total = cfg.param_count()
+        mult = 3.0 if self.kind == "train" else 1.0         # fwd+bwd vs fwd
+        remat_mult = (4 / 3 if (self.kind == "train" and m.remat == 0) else 1.0)
+        flops_dev = 2.0 * n_active * tokens * mult * remat_mult / self.chips
+        compute_s = flops_dev / PEAK_FLOPS_BF16
+
+        # HBM traffic: weights streamed once per microbatch + activations
+        act_bytes = tokens * cfg.d_model * cfg.num_layers * 2 * 4 / self.chips
+        weight_bytes = n_active / tp * 2 * micro * mult
+        memory_s = (act_bytes + weight_bytes) / HBM_BW
+
+        # collectives: Megatron 2 all-reduce/layer fwd (+2 bwd) of the
+        # activation shard + DP gradient reduce-scatter of the param shard
+        ar_bytes = (2 * mult * cfg.num_layers
+                    * (tokens / dp) * cfg.d_model * 2 * (tp - 1) / max(tp, 1))
+        dp_bytes = (2.0 * n_total / tp * 4 * (dp - 1) / max(dp, 1)
+                    if self.kind == "train" else 0.0)
+        coll_s = (ar_bytes + dp_bytes) / ICI_BW
+
+        time_s = compute_s + memory_s + coll_s
+
+        # per-chip HBM footprint ("power"); params/optimizer FSDP over all
+        # chips (constant in the knobs), activations set the gradient.
+        opt_mult = (4 + 4 + 4 + 2) if self.kind == "train" else 2
+        param_hbm = n_total * opt_mult / self.chips
+        act_live = (tokens * tp / self.chips / micro) * cfg.d_model * 2 \
+            * (2 if m.remat == 0 else cfg.num_layers) \
+            * (1 if self.kind == "train" else 0.25)
+        kv_hbm = 0.0
+        if self.kind != "train" and cfg.n_kv_heads:
+            kv_hbm = (self.batch * tp / self.chips) * cfg.num_layers * 2 \
+                * cfg.n_kv_heads * cfg.resolved_head_dim * self.seq * 2
+        hbm = param_hbm + act_live + kv_hbm
+        return time_s, hbm
+
+
+class GMDForTPU(_GMDBase):
+    """GMD over the TPU knob space: min step time s.t. per-chip HBM <= budget.
+
+    Identical machinery to GMDTrain — the 'profiler' is the roofline model
+    (or a real dry-run), the 'power budget' is HBM_BYTES.
+    """
+
+    def __init__(self, model: RooflineTPUModel,
+                 space: Optional[TPUKnobSpace] = None,
+                 hbm_budget: float = float(HBM_BYTES), max_tries: int = 10):
+        super().__init__(profiler=None, space=space or TPUKnobSpace(model.chips),
+                         max_tries=max_tries)
+        self.model = model
+        self.hbm_budget = hbm_budget
+        self.num_profiles = 0
+        self._obs: dict[TPUMode, tuple[float, float]] = {}
+
+    def solve(self) -> Optional[P.Solution]:
+        """Slope-prioritized coordinate search, adapted for TPU knobs.
+
+        One departure from Jetson GMD, documented in DESIGN.md: on the Orin,
+        minibatch time falls monotonically along every dimension, so "feasible
+        => everything below is dominated" prunes half-lines. On TPU knobs time
+        is NON-monotone (e.g. raising tp trades collective bytes against
+        weight-streaming bytes), so the objective-side pruning is replaced by
+        a convex line search per dimension; the monotone-HBM pruning (the
+        power-budget analogue) is kept verbatim.
+        """
+        self._obs = {}
+        self.num_profiles = 0
+        sp = self.space
+        mid = sp.midpoint()
+        self._profile(mid)
+        current = mid
+
+        # initial probes at both ends of each dim -> time slopes
+        slopes = {}
+        for dim, vals in sp.values.items():
+            if len(vals) < 2:
+                continue
+            lo = current.replace(**{dim: vals[0]})
+            hi = current.replace(**{dim: vals[-1]})
+            t_lo, _ = self._profile(lo)
+            t_hi, h_hi = self._profile(hi)
+            slopes[dim] = abs(t_hi - t_lo) / (vals[-1] - vals[0])
+
+        # coordinate descent in decreasing slope order; per-dim convex search
+        for dim in sorted(slopes, key=slopes.get, reverse=True):
+            vals = sp.values[dim]
+            lo_i, hi_i = 0, len(vals) - 1
+            while hi_i - lo_i > 1 and self.num_profiles < self.max_tries + 8:
+                m1 = lo_i + (hi_i - lo_i) // 3
+                m2 = hi_i - (hi_i - lo_i) // 3
+                if m2 == m1:
+                    m2 = m1 + 1
+                t1, h1 = self._profile(current.replace(**{dim: vals[m1]}))
+                t2, h2 = self._profile(current.replace(**{dim: vals[m2]}))
+                # monotone-HBM pruning: an over-budget point rules out
+                # everything above it on this line
+                if h1 > self.hbm_budget:
+                    hi_i = m1 - 1
+                    continue
+                if h2 > self.hbm_budget:
+                    hi_i = m2 - 1
+                    continue
+                if t1 <= t2:
+                    hi_i = m2 - 1 if m2 > m1 else hi_i - 1
+                else:
+                    lo_i = m1 + 1
+            # anchor at the best feasible value seen on this line
+            best_v = None
+            best_t = float("inf")
+            for mode, (t, h) in self._obs.items():
+                if h <= self.hbm_budget and t < best_t and all(
+                        mode.value(d) == current.value(d)
+                        for d in sp.values if d != dim):
+                    best_v, best_t = mode.value(dim), t
+            if best_v is not None:
+                current = current.replace(**{dim: best_v})
+
+        best = None
+        for mode, (t, hbm) in self._obs.items():
+            if hbm <= self.hbm_budget and (best is None or t < best.time):
+                best = P.Solution(pm=mode, time=t, power=hbm,
+                                  throughput=1.0 / t)
+        return best
+
+    def _profile(self, mode):
+        if mode not in self._obs:
+            self.num_profiles += 1
+            self._obs[mode] = self.model.time_power(mode)
+        return self._obs[mode]
+
+    def _power_budget(self):
+        return self.hbm_budget
+
+    def _note_candidate(self, mode, t, p):
+        self._obs[mode] = (t, p)
+
+
+def exhaustive_best(model: RooflineTPUModel,
+                    space: Optional[TPUKnobSpace] = None,
+                    hbm_budget: float = float(HBM_BYTES)):
+    """Oracle over the (small) TPU knob grid, for evaluating GMDForTPU."""
+    space = space or TPUKnobSpace(model.chips)
+    best = None
+    for mode in space.all_modes():
+        t, hbm = model.time_power(mode)
+        if hbm <= hbm_budget and (best is None or t < best[1]):
+            best = (mode, t, hbm)
+    return best

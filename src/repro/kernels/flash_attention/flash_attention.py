@@ -1,0 +1,105 @@
+"""Pallas TPU flash attention (causal, optional sliding window).
+
+Blocking: grid = (B*H, S/BQ, S/BK); the KV loop is the innermost grid axis so
+the (BQ, D) accumulator, running max m and normalizer l live in VMEM scratch
+across KV iterations (online softmax). Block sizes default to 128x128 —
+MXU-aligned on the (8, 128)/(128, 128) tiling of TPU v5e. Causality is
+exploited structurally: KV blocks strictly above the diagonal are skipped via
+@pl.when, and sliding-window masking zeroes within-block entries.
+
+HBM->VMEM traffic per (q-block, kv-block): BQ*D + 2*BK*D + outputs; the
+working set (q, k, v blocks + accumulator) is ~4*128*D*4 bytes, well inside
+the ~16 MiB v5e VMEM for D <= 256.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+                  *, scale: float, block_q: int, block_k: int,
+                  window: Optional[int], num_kv_blocks: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # skip blocks strictly above the causal diagonal
+    @pl.when(ki * block_k <= qi * block_q + block_q - 1)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)                 # (BQ, D)
+        k = k_ref[0].astype(jnp.float32)                 # (BK, D)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        qpos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        kpos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = kpos <= qpos
+        if window is not None:
+            mask = mask & (kpos > qpos - window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(ki == num_kv_blocks - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    window: Optional[int] = None,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = False) -> jax.Array:
+    """q, k, v: (B, H, S, D) -> (B, H, S, D), causal flash attention."""
+    b, h, s, d = q.shape
+    assert s % block_q == 0 and s % block_k == 0, (s, block_q, block_k)
+    bh = b * h
+    qf = q.reshape(bh, s, d)
+    kf = k.reshape(bh, s, d)
+    vf = v.reshape(bh, s, d)
+    nq, nk = s // block_q, s // block_k
+    scale = 1.0 / math.sqrt(d)
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, block_q=block_q, block_k=block_k,
+        window=window, num_kv_blocks=nk)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(bh, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda b, qi, ki: (b, qi, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, qi, ki: (b, ki, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, qi, ki: (b, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda b, qi, ki: (b, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running max m
+            pltpu.VMEM((block_q, 1), jnp.float32),   # normalizer l
+            pltpu.VMEM((block_q, d), jnp.float32),   # output accumulator
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(b, h, s, d)

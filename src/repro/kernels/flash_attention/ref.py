@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the flash attention kernel: causal (optionally
+sliding-window) multi-head attention, fp32 softmax."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax.numpy as jnp
+import jax
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                  window: Optional[int] = None) -> jax.Array:
+    """q, k, v: (B, H, S, D) -> (B, H, S, D). Causal; optional window."""
+    s = q.shape[2]
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(s)[None, :]
+    mask = kpos <= qpos
+    if window is not None:
+        mask = mask & (kpos > qpos - window)
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,63 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+On a TPU backend the kernels run compiled; elsewhere (this CPU container)
+they execute via ``interpret=True``, which runs the kernel body in Python —
+bit-correct for validation against the ref.py oracles, not for speed.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import flash_attention as _flash
+from repro.kernels.ssd_scan.ssd_scan import ssd_chunk as _ssd_chunk
+from repro.kernels.tiled_matmul.tiled_matmul import tiled_matmul as _mm
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("window", "block_q", "block_k"))
+def flash_attention(q, k, v, window: Optional[int] = None,
+                    block_q: int = 128, block_k: int = 128):
+    """Causal (windowed) attention, (B, H, S, D) layout."""
+    return _flash(q, k, v, window=window, block_q=block_q, block_k=block_k,
+                  interpret=not _on_tpu())
+
+
+@jax.jit
+def ssd_scan(x, dt, A, B, C):
+    """Full SSD scan via the Pallas intra-chunk kernel + jnp inter-chunk
+    recurrence. x: (b, nc, l, h, p); dt: (b, nc, l, h); A: (h,);
+    B, C: (b, nc, l, n). Returns (y: (b, nc, l, h, p), final_state)."""
+    b, nc, l, h, p = x.shape
+    dA = dt * A[None, None, None, :]
+    y_diag, states = _ssd_chunk(x, dA, dt, B, C, interpret=not _on_tpu())
+    # inter-chunk recurrence (O(nc) tiny work) in jnp
+    dA_cs = jnp.cumsum(dA, axis=2)
+    chunk_decay = jnp.exp(dA_cs[:, :, -1, :])              # (b, nc, h)
+    init = jnp.zeros((b, h, states.shape[3], p), jnp.float32)
+
+    def step(carry, inp):
+        st, dec = inp
+        new = carry * dec[:, :, None, None] + st
+        return new, carry
+
+    final, prev = jax.lax.scan(
+        step, init, (states.transpose(1, 0, 2, 3, 4),
+                     chunk_decay.transpose(1, 0, 2)))
+    prev = prev.transpose(1, 0, 2, 3, 4)                   # (b, nc, h, n, p)
+    state_decay = jnp.exp(dA_cs)                           # (b, nc, l, h)
+    Ch = jnp.repeat(C[:, :, :, None], h, axis=3)
+    y_off = jnp.einsum("bclhn,bchnp,bclh->bclhp", Ch, prev, state_decay)
+    return (y_diag.astype(jnp.float32) + y_off).astype(x.dtype), final
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k"))
+def tiled_matmul(a, b, block_m: int = 128, block_n: int = 128, block_k: int = 128):
+    return _mm(a, b, block_m=block_m, block_n=block_n, block_k=block_k,
+               interpret=not _on_tpu())

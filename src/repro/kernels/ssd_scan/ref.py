@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the SSD kernels: the chunked scan from
+repro.models.layers (itself validated against step-by-step recurrence in the
+test suite) restricted to the intra-chunk pieces the kernel computes."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import _segsum, ssd_chunked
+
+
+def ssd_chunk_ref(x, dA, dt, B, C):
+    """Same contract as ssd_scan.ssd_chunk (single group).
+
+    x: (b, nc, l, h, p); dA, dt: (b, nc, l, h); B, C: (b, nc, l, n).
+    Returns (y_diag, states) with states (b, nc, h, n, p).
+    """
+    h = x.shape[3]
+    Bh = jnp.repeat(B[:, :, :, None], h, axis=3)       # (b,nc,l,h,n)
+    Ch = jnp.repeat(C[:, :, :, None], h, axis=3)
+    dA_cs = jnp.cumsum(dA, axis=2)
+    L = jnp.exp(_segsum(dA.transpose(0, 1, 3, 2)))     # (b,nc,h,l,l)
+    scores = jnp.einsum("bclhn,bcshn->bchls", Ch, Bh)
+    y_diag = jnp.einsum("bchls,bchls,bcshp,bcsh->bclhp", scores, L,
+                        x.astype(jnp.float32), dt)
+    decay = jnp.exp(dA_cs[:, :, -1:, :] - dA_cs)       # (b,nc,l,h)
+    states = jnp.einsum("bclhn,bclh,bclh,bclhp->bchnp", Bh, decay, dt,
+                        x.astype(jnp.float32))
+    return y_diag.astype(x.dtype), states
+
+
+def ssd_full_ref(x, dt, A, B, C, chunk):
+    """Full SSD (intra + inter chunk), via the model-layer implementation."""
+    return ssd_chunked(x, dt, A, B, C, chunk)

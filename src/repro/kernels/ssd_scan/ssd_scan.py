@@ -1,0 +1,87 @@
+"""Pallas TPU kernel for the Mamba2 SSD intra-chunk computation.
+
+The SSD algorithm (arXiv:2405.21060) splits the sequence into chunks; within
+a chunk the recurrence is expressed as a small attention-like quadratic form
+(MXU work), while chunk-to-chunk state passing is a cheap recurrence. This
+kernel computes, per (batch, chunk, head) grid cell, entirely in VMEM:
+
+  y_diag = (C B^T  *  L  *  dt_row) x          (l, p)   intra-chunk output
+  states = (B * decay * dt)^T x                (n, p)   chunk-final state
+
+where L = exp(segsum(dt*A)) is the causal decay matrix. The inter-chunk
+recurrence + off-diagonal correction stay in jnp (they are O(l) work and
+bandwidth-trivial) — see ops.ssd_scan.
+
+Block sizes: the chunk length l (default 128/256) and head dim p (64) are the
+MXU dims; VMEM working set per cell = l*(p + 2n + l) * 4 bytes (< 1 MiB for
+l=256, n=128).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_chunk_kernel(x_ref, dA_ref, dt_ref, b_ref, c_ref,
+                      y_ref, st_ref):
+    x = x_ref[0, 0, :, 0, :].astype(jnp.float32)      # (l, p)
+    dA = dA_ref[0, 0, :, 0].astype(jnp.float32)       # (l,)
+    dt = dt_ref[0, 0, :, 0].astype(jnp.float32)       # (l,)
+    B = b_ref[0, 0].astype(jnp.float32)               # (l, n)
+    C = c_ref[0, 0].astype(jnp.float32)               # (l, n)
+
+    l = x.shape[0]
+    dA_cs = jnp.cumsum(dA)
+    seg = dA_cs[:, None] - dA_cs[None, :]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (l, l), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (l, l), 1)
+    L = jnp.where(jj <= ii, jnp.exp(seg), 0.0)
+
+    scores = jax.lax.dot_general(C, B, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    y = jax.lax.dot_general(scores * L * dt[None, :], x,
+                            (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    y_ref[0, 0, :, 0, :] = y.astype(y_ref.dtype)
+
+    decay = jnp.exp(dA_cs[-1] - dA_cs)                 # (l,)
+    wb = B * (decay * dt)[:, None]                     # (l, n)
+    st = jax.lax.dot_general(wb, x, (((0,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)   # (n, p)
+    st_ref[0, 0, 0] = st.astype(st_ref.dtype)
+
+
+def ssd_chunk(x: jax.Array, dA: jax.Array, dt: jax.Array,
+              B: jax.Array, C: jax.Array, interpret: bool = False):
+    """Intra-chunk SSD.
+
+    x: (b, nc, l, h, p); dA, dt: (b, nc, l, h); B, C: (b, nc, l, n)
+    (single SSM group broadcast over heads).
+    Returns (y_diag: (b, nc, l, h, p), states: (b, nc, h, n, p)).
+    """
+    b, nc, l, h, p = x.shape
+    n = B.shape[-1]
+    out = pl.pallas_call(
+        _ssd_chunk_kernel,
+        grid=(b, nc, h),
+        in_specs=[
+            pl.BlockSpec((1, 1, l, 1, p), lambda bi, ci, hi: (bi, ci, 0, hi, 0)),
+            pl.BlockSpec((1, 1, l, 1), lambda bi, ci, hi: (bi, ci, 0, hi)),
+            pl.BlockSpec((1, 1, l, 1), lambda bi, ci, hi: (bi, ci, 0, hi)),
+            pl.BlockSpec((1, 1, l, n), lambda bi, ci, hi: (bi, ci, 0, 0)),
+            pl.BlockSpec((1, 1, l, n), lambda bi, ci, hi: (bi, ci, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, l, 1, p), lambda bi, ci, hi: (bi, ci, 0, hi, 0)),
+            pl.BlockSpec((1, 1, 1, n, p), lambda bi, ci, hi: (bi, ci, hi, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, nc, l, h, p), x.dtype),
+            jax.ShapeDtypeStruct((b, nc, h, n, p), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, dA, dt, B, C)
+    return out

@@ -1,0 +1,57 @@
+"""Pallas TPU tiled matmul with fp32 VMEM accumulator.
+
+Grid = (M/bm, N/bn, K/bk) with K innermost so the (bm, bn) accumulator stays
+resident in VMEM across the contraction. Tiles default to 128x128x128 (MXU
+native); the working set 3 * 128*128*4 B = 192 KiB fits VMEM with headroom
+for double-buffered HBM->VMEM prefetch of the next K tile.
+
+Used as the expert-FFN GEMM building block in the MoE path (per-expert
+(capacity, d_model) x (d_model, d_ff) batches).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _mm_kernel(a_ref, b_ref, o_ref, acc_scr, *, num_k: int):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    acc_scr[...] += jax.lax.dot_general(
+        a_ref[...].astype(jnp.float32), b_ref[...].astype(jnp.float32),
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(ki == num_k - 1)
+    def _done():
+        o_ref[...] = acc_scr[...].astype(o_ref.dtype)
+
+
+def tiled_matmul(a: jax.Array, b: jax.Array,
+                 block_m: int = 128, block_n: int = 128, block_k: int = 128,
+                 interpret: bool = False) -> jax.Array:
+    """a: (M, K) @ b: (K, N) -> (M, N)."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2
+    assert m % block_m == 0 and n % block_n == 0 and k % block_k == 0
+    nk = k // block_k
+    return pl.pallas_call(
+        functools.partial(_mm_kernel, num_k=nk),
+        grid=(m // block_m, n // block_n, nk),
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda mi, ni, ki: (mi, ki)),
+            pl.BlockSpec((block_k, block_n), lambda mi, ni, ki: (ki, ni)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda mi, ni, ki: (mi, ni)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        interpret=interpret,
+    )(a, b)

@@ -1,0 +1,166 @@
+"""Jit-able step functions (train / prefill / decode) with their shardings.
+
+These are the units the launcher jits, the dry-run lowers, and the Fulcrum
+interleave runtime alternates between.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import InputShape, batch_struct, input_specs
+from repro.models import model as M
+from repro.models import sharding as S
+from repro.optim.adamw import AdamWConfig, adamw_update, init_opt_state
+
+
+def make_train_step(cfg: M.ModelConfig, opt_cfg: AdamWConfig = AdamWConfig(),
+                    microbatches: int = 1) -> Callable:
+    """One optimizer step. microbatches > 1 = gradient accumulation via
+    lax.scan: activation memory shrinks ~1/microbatches at the cost of one
+    fp32 grad buffer (params-shaped, FSDP-sharded like params)."""
+    if microbatches == 1:
+        def train_step(params, opt_state, batch):
+            (loss, metrics), grads = jax.value_and_grad(
+                M.train_loss, has_aux=True)(params, batch, cfg)
+            new_params, new_opt, stats = adamw_update(grads, opt_state, params, opt_cfg)
+            return new_params, new_opt, {**metrics, **stats}
+        return train_step
+
+    def train_step(params, opt_state, batch):
+        mb_batch = jax.tree.map(
+            lambda x: x.reshape(microbatches, x.shape[0] // microbatches,
+                                *x.shape[1:]), batch)
+
+        def mb(acc, one):
+            (loss, metrics), grads = jax.value_and_grad(
+                M.train_loss, has_aux=True)(params, one, cfg)
+            acc = jax.tree.map(
+                lambda a, g: a + g.astype(jnp.float32) / microbatches,
+                acc, grads)
+            return acc, metrics
+
+        zero = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), params)
+        grads, metrics = jax.lax.scan(mb, zero, mb_batch, unroll=cfg.unroll)
+        metrics = jax.tree.map(lambda x: jnp.mean(x), metrics)
+        new_params, new_opt, stats = adamw_update(grads, opt_state, params, opt_cfg)
+        return new_params, new_opt, {**metrics, **stats}
+    return train_step
+
+
+def make_prefill_step(cfg: M.ModelConfig, max_seq_len: int) -> Callable:
+    def prefill_step(params, batch):
+        return M.prefill(params, batch, cfg, max_seq_len)
+    return prefill_step
+
+
+def make_decode_step(cfg: M.ModelConfig) -> Callable:
+    def decode_step(params, cache, batch, pos):
+        return M.decode_step(params, cache, batch, pos, cfg)
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# sharded jit assembly for a (cfg, shape, mesh) triple
+# ---------------------------------------------------------------------------
+
+def _ns(mesh: Mesh, tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _logits_spec(cfg: M.ModelConfig, mesh: Mesh, batch: int) -> P:
+    bax = S.batch_axes(mesh, batch)
+    v = "model" if cfg.padded_vocab % S.axis_size(mesh, "model") == 0 else None
+    if cfg.arch_type == "audio":
+        return P(bax, None, None, v)
+    return P(bax, None, v)
+
+
+def _act_constraint(mesh: Mesh, batch: int):
+    """Pin activations to batch-over-data at layer boundaries so GSPMD
+    all-gathers (small, per-layer) weights rather than activations. Rank-4
+    (B, S, H, D) attention internals are pinned too (head axis replicated on
+    model when indivisible), forcing the reshard to happen once in bf16."""
+    sh3 = NamedSharding(mesh, S.activation_spec(mesh, batch))
+    bax = S.batch_axes(mesh, batch)
+
+    def fn(x):
+        if x.ndim == 3:
+            return jax.lax.with_sharding_constraint(x, sh3)
+        if x.ndim == 4:
+            h_ax = "model" if x.shape[2] % S.axis_size(mesh, "model") == 0 else None
+            sh4 = NamedSharding(mesh, P(bax, None, h_ax, None))
+            return jax.lax.with_sharding_constraint(x, sh4)
+        return x
+    return fn
+
+
+def jitted_step(cfg: M.ModelConfig, shape: InputShape, mesh: Mesh,
+                opt_cfg: AdamWConfig = AdamWConfig(), donate: bool = True,
+                microbatches: int = 1, fsdp_params: bool = True):
+    """Returns (jitted_fn, abstract_args) for the given workload shape.
+
+    abstract_args are ShapeDtypeStructs suitable for .lower(*abstract_args).
+    Perf variants: microbatches (gradient accumulation), fsdp_params=False
+    (TP-only param storage for serving).
+    """
+    pspec = S.param_specs(cfg, mesh, fsdp_on=fsdp_params)
+    pshard = _ns(mesh, pspec)
+    specs = input_specs(cfg, shape)
+    bshard = _ns(mesh, S.batch_specs(specs["batch"], mesh))
+    params_abs = jax.eval_shape(lambda k: M.init_params(k, cfg), jax.random.key(0))
+
+    act = M.activation_sharding
+    constraint = _act_constraint(mesh, shape.global_batch)
+
+    def wrap(step_fn):
+        def wrapped(*a):
+            with act(constraint):
+                return step_fn(*a)
+        return wrapped
+
+    if shape.kind == "train":
+        opt_abs = jax.eval_shape(init_opt_state, params_abs)
+        opt_shard = {"m": pshard, "v": pshard,
+                     "step": NamedSharding(mesh, P())}
+        if "master" in opt_abs:
+            opt_shard["master"] = pshard
+        fn = jax.jit(
+            wrap(make_train_step(cfg, opt_cfg, microbatches=microbatches)),
+            in_shardings=(pshard, opt_shard, bshard),
+            out_shardings=(pshard, opt_shard, None),
+            donate_argnums=(0, 1) if donate else (),
+        )
+        return fn, (params_abs, opt_abs, specs["batch"])
+
+    if shape.kind == "prefill":
+        cshard = _ns(mesh, S.cache_specs(cfg, mesh, shape.global_batch, shape.seq_len))
+        lshard = NamedSharding(mesh, _logits_spec(cfg, mesh, shape.global_batch))
+        fn = jax.jit(
+            wrap(make_prefill_step(cfg, shape.seq_len)),
+            in_shardings=(pshard, bshard),
+            out_shardings=(lshard, cshard),
+        )
+        return fn, (params_abs, specs["batch"])
+
+    if shape.kind == "decode":
+        cspec = S.cache_specs(cfg, mesh, shape.global_batch, shape.seq_len)
+        cshard = _ns(mesh, cspec)
+        bax = S.batch_axes(mesh, shape.global_batch)
+        pos_shard = NamedSharding(mesh, P(bax))
+        lshard = NamedSharding(mesh, _logits_spec(cfg, mesh, shape.global_batch))
+        cache_abs = specs["cache"]
+        fn = jax.jit(
+            wrap(make_decode_step(cfg)),
+            in_shardings=(pshard, cshard, bshard, pos_shard),
+            out_shardings=(lshard, cshard),
+            donate_argnums=(1,) if donate else (),
+        )
+        return fn, (params_abs, cache_abs, specs["batch"], specs["pos"])
+
+    raise ValueError(shape.kind)

@@ -1,0 +1,47 @@
+"""Training launcher.
+
+  PYTHONPATH=src python -m repro.launch.train --arch stablelm-1.6b \
+      --steps 50 [--reduced] [--batch 8 --seq 128] [--ckpt /tmp/ck.npz]
+
+On this CPU container only --reduced configs execute; the full-size configs
+are exercised through repro.launch.dryrun (lower+compile, no allocation).
+On a TPU fleet the same jitted step runs under make_production_mesh().
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.configs import get_config, reduced as reduce_cfg
+from repro.optim.adamw import AdamWConfig
+from repro.runtime.train_loop import Trainer
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduce_cfg(cfg)
+    print(f"training {cfg.name} ({cfg.arch_type}), {cfg.num_layers}L "
+          f"d={cfg.d_model}, batch={args.batch} seq={args.seq}")
+    trainer = Trainer(cfg, args.batch, args.seq,
+                      AdamWConfig(lr=args.lr, total_steps=args.steps),
+                      ckpt_path=args.ckpt)
+    trainer.restore()
+    report = trainer.train(args.steps, log_every=10,
+                           ckpt_every=args.ckpt_every)
+    print(f"done: loss {report.losses[0]:.4f} -> {report.final_loss:.4f}, "
+          f"{report.mean_step_time*1e3:.0f} ms/step")
+
+
+if __name__ == "__main__":
+    main()

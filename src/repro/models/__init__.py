@@ -1,0 +1,2 @@
+from repro.models.model import (ModelConfig, decode_step, forward, init_cache,
+                                init_params, train_loss)

@@ -1,0 +1,183 @@
+"""GSPMD sharding rules for the model zoo.
+
+Megatron-style tensor parallelism on the ``model`` mesh axis + FSDP/ZeRO-3
+storage sharding of params and optimizer state over the data axes
+(``('data',)`` per pod, ``('pod', 'data')`` multi-pod). Rules are applied by
+pattern-matching parameter paths against an ``eval_shape`` of the param tree,
+with divisibility fallbacks (a dim that does not divide the axis size is left
+unsharded rather than failing to lower).
+
+Expert axis: sharded on ``model`` when n_experts % model == 0 (expert
+parallelism, e.g. Arctic 128e); otherwise the per-expert FFN dim shards
+(tensor parallelism inside each expert, e.g. Mixtral 8e on a 16-way axis).
+GQA KV heads replicate over ``model`` when n_kv < model.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.model import ModelConfig, init_params, init_cache
+
+
+def axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    return math.prod(mesh.shape[a] for a in axes)
+
+
+def _maybe(mesh: Mesh, axes, dim: int):
+    """Return `axes` if dim is divisible by their total size, else None."""
+    if axes is None:
+        return None
+    return axes if dim % axis_size(mesh, axes) == 0 else None
+
+
+def fsdp_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def batch_axes(mesh: Mesh, batch: int):
+    """Largest prefix of (pod, data) whose product divides `batch`."""
+    cand = [a for a in ("pod", "data") if a in mesh.axis_names]
+    chosen: list[str] = []
+    prod = 1
+    for a in cand:
+        if batch % (prod * mesh.shape[a]) == 0:
+            chosen.append(a)
+            prod *= mesh.shape[a]
+    return tuple(chosen) or None
+
+
+# ---------------------------------------------------------------------------
+# parameter specs
+# ---------------------------------------------------------------------------
+
+def _leaf_spec(path: str, shape: tuple[int, ...], cfg: ModelConfig, mesh: Mesh,
+               fsdp_on: bool = True) -> P:
+    fsdp = fsdp_axes(mesh) if fsdp_on else None
+    M = "model"
+    stacked = 0
+    if path.startswith("layers/"):
+        stacked = 1            # leading num_layers axis from the scan stack
+    if path.startswith("embed_cb/"):
+        stacked = 1            # leading codebook axis
+    core = shape[stacked:]
+
+    def done(*spec):
+        return P(*([None] * stacked), *spec)
+
+    # --- norms / scalars -------------------------------------------------
+    last = path.rsplit("/", 1)[-1]
+    if last in ("scale", "bias", "A_log", "D", "dt_bias", "conv_b") or len(core) == 0:
+        return done(*([None] * len(core)))
+    if last == "b":            # projection bias (fused head dim)
+        return done(_maybe(mesh, M, core[0]))
+
+    # --- embeddings ------------------------------------------------------
+    if "embed" in path and last == "table":
+        return done(_maybe(mesh, M, core[0]), _maybe(mesh, fsdp, core[1]))
+
+    # --- MoE -------------------------------------------------------------
+    if "/moe/" in path or path.endswith("router"):
+        if last == "router":
+            return done(_maybe(mesh, fsdp, core[0]), None)
+        if last in ("w1", "w3") and len(core) == 3:     # (E, d, f)
+            if core[0] % axis_size(mesh, M) == 0:
+                return done(M, _maybe(mesh, fsdp, core[1]), None)
+            return done(None, _maybe(mesh, fsdp, core[1]), _maybe(mesh, M, core[2]))
+        if last == "w2" and len(core) == 3:             # (E, f, d)
+            if core[0] % axis_size(mesh, M) == 0:
+                return done(M, None, _maybe(mesh, fsdp, core[2]))
+            return done(None, _maybe(mesh, M, core[1]), _maybe(mesh, fsdp, core[2]))
+        # dense-residual branch falls through to MLP rules below
+
+    # --- SSM -------------------------------------------------------------
+    if last == "in_proj":
+        return done(_maybe(mesh, fsdp, core[0]), _maybe(mesh, M, core[1]))
+    if last == "conv_w":
+        return done(None, _maybe(mesh, M, core[1]))
+    if last == "out_proj":
+        return done(_maybe(mesh, M, core[0]), _maybe(mesh, fsdp, core[1]))
+
+    # --- attention / MLP 2-D weights --------------------------------------
+    if len(core) == 2:
+        d_in, d_out = core
+        if "/attn/wo" in path or last == "w2":
+            return done(_maybe(mesh, M, d_in), _maybe(mesh, fsdp, d_out))
+        # wq/wk/wv, mlp w1/w3, vision_proj: shard output dim on model
+        return done(_maybe(mesh, fsdp, d_in), _maybe(mesh, M, d_out))
+
+    return done(*([None] * len(core)))
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def param_specs(cfg: ModelConfig, mesh: Mesh, fsdp_on: bool = True):
+    """fsdp_on=False -> tensor-parallel-only storage (serving variants that
+    fit per-chip HBM skip the per-layer weight all-gathers)."""
+    shapes = jax.eval_shape(lambda k: init_params(k, cfg), jax.random.key(0))
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _leaf_spec(_path_str(path), leaf.shape, cfg, mesh,
+                                      fsdp_on), shapes)
+
+
+def param_shardings(cfg: ModelConfig, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), param_specs(cfg, mesh),
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# batch / cache specs
+# ---------------------------------------------------------------------------
+
+def batch_specs(batch_shapes: dict, mesh: Mesh):
+    """PartitionSpec per batch leaf: shard dim-0 (global batch) on data axes."""
+    def spec(leaf):
+        b = leaf.shape[0]
+        ax = batch_axes(mesh, b)
+        return P(ax, *([None] * (len(leaf.shape) - 1)))
+    return jax.tree.map(spec, batch_shapes)
+
+
+def cache_specs(cfg: ModelConfig, mesh: Mesh, batch: int, seq_len: int):
+    shapes = jax.eval_shape(lambda: init_cache(cfg, batch, seq_len))
+    bax = batch_axes(mesh, batch)
+    M = "model"
+
+    def spec(path, leaf):
+        p = _path_str(path)
+        sh = leaf.shape
+        if p.startswith("kv_pos"):                       # (L|sites, B, clen)
+            return P(None, bax, _maybe(mesh, M, sh[2]) if sh[2] else None)
+        if p.startswith("kv"):                           # (L, B, clen, Hkv, hd)
+            h_ax = _maybe(mesh, M, sh[3])
+            c_ax = None if h_ax else _maybe(mesh, M, sh[2])
+            return P(None, bax, c_ax, h_ax, None)
+        if "conv" in p:                                  # (L, B, k, conv_dim)
+            return P(None, bax, None, _maybe(mesh, M, sh[3]))
+        if "ssm" in p:                                   # (L, B, H, P, N)
+            return P(None, bax, _maybe(mesh, M, sh[2]), None, None)
+        return P(*([None] * len(sh)))
+
+    return jax.tree_util.tree_map_with_path(spec, shapes)
+
+
+def activation_spec(mesh: Mesh, batch: int) -> P:
+    return P(batch_axes(mesh, batch), None, None)

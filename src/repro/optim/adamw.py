@@ -1,0 +1,93 @@
+"""AdamW + LR schedules, pure JAX (no optax dependency).
+
+Optimizer state mirrors the param pytree, so the FSDP/ZeRO param
+PartitionSpecs apply verbatim to m/v (ZeRO-1/3 falls out of the sharding
+rules, not of the optimizer)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+def schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup + cosine decay to min_lr_ratio."""
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(cfg.warmup_steps, 1)
+    decay_steps = jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1)
+    frac = jnp.clip((step - cfg.warmup_steps) / decay_steps, 0.0, 1.0)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    return cfg.lr * jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def init_opt_state(params: Any) -> dict:
+    """m/v in fp32; when params are stored low-precision (bf16 forward
+    weights), a sharded fp32 master copy lives here too (mixed precision)."""
+    zeros = lambda p: jax.tree.map(lambda x: jnp.zeros_like(x, jnp.float32), p)
+    state = {"m": zeros(params), "v": zeros(params),
+             "step": jnp.zeros((), jnp.int32)}
+    if any(x.dtype != jnp.float32 for x in jax.tree.leaves(params)):
+        state["master"] = jax.tree.map(
+            lambda x: x.astype(jnp.float32), params)
+    return state
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def adamw_update(grads: Any, opt_state: dict, params: Any,
+                 cfg: AdamWConfig) -> tuple[Any, dict, dict]:
+    """Returns (new_params, new_opt_state, stats)."""
+    step = opt_state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    lr = schedule(cfg, step)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, p, master):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        mhat = m / b1c
+        vhat = v / b2c
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        ref = master if master is not None else p.astype(jnp.float32)
+        if p.ndim >= 2:  # decay matrices only (norms/bias exempt)
+            delta = delta + cfg.weight_decay * ref
+        new_master = ref - lr * delta
+        return new_master.astype(p.dtype), m, v, new_master
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_m = treedef.flatten_up_to(opt_state["m"])
+    flat_v = treedef.flatten_up_to(opt_state["v"])
+    flat_p = treedef.flatten_up_to(params)
+    flat_master = (treedef.flatten_up_to(opt_state["master"])
+                   if "master" in opt_state else [None] * len(flat_p))
+    new = [upd(g, m, v, p, mr) for g, m, v, p, mr in
+           zip(flat_g, flat_m, flat_v, flat_p, flat_master)]
+    new_p = treedef.unflatten([n[0] for n in new])
+    new_state = {"m": treedef.unflatten([n[1] for n in new]),
+                 "v": treedef.unflatten([n[2] for n in new]),
+                 "step": step}
+    if "master" in opt_state:
+        new_state["master"] = treedef.unflatten([n[3] for n in new])
+    stats = {"grad_norm": gnorm, "lr": lr}
+    return new_p, new_state, stats

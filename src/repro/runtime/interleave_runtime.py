@@ -1,0 +1,76 @@
+"""Real-mode managed interleaving: Fulcrum's executor over actual jitted JAX
+steps (reduced models on CPU; identical control flow on a TPU host).
+
+This is the wall-clock counterpart of core.interleave.simulate_managed: one
+program owns the accelerator, alternating tau_tr jitted train minibatches
+with one jitted inference minibatch, switching only at minibatch boundaries.
+A training step is launched only if it is predicted (from its measured step
+time) to finish before the next inference batch is ready, so inference never
+queues behind training.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import numpy as np
+
+from repro.core.interleave import ExecutionReport
+from repro.configs.base import make_batch
+from repro.runtime.serving import BatchInferenceServer
+from repro.runtime.train_loop import Trainer
+
+
+@dataclasses.dataclass
+class InterleaveConfig:
+    arrival_rate: float            # requests / s
+    infer_bs: int
+    latency_budget: float          # s
+    duration: float = 20.0         # wall seconds
+
+
+class ManagedInterleaveRuntime:
+    def __init__(self, trainer: Optional[Trainer],
+                 server: BatchInferenceServer, cfg: InterleaveConfig):
+        self.trainer = trainer
+        self.server = server
+        self.cfg = cfg
+        self.t_tr = trainer.train_minibatch_time() if trainer else float("inf")
+
+    def run(self) -> ExecutionReport:
+        cfg = self.cfg
+        bs = cfg.infer_bs
+        latencies: list[float] = []
+        trained = 0
+        start = time.time()
+        next_arrival_idx = 0
+        now = 0.0
+
+        def arrival(i: int) -> float:
+            return i / cfg.arrival_rate
+
+        while now < cfg.duration:
+            batch_ready = arrival(next_arrival_idx + bs - 1)
+            if batch_ready > cfg.duration:
+                break
+            # fill slack with training minibatches that fit before the batch
+            while self.trainer and (time.time() - start) + self.t_tr <= batch_ready:
+                b = next(self.trainer.data)
+                self.trainer.params, self.trainer.opt_state, _ = \
+                    self.trainer.step_fn(self.trainer.params,
+                                         self.trainer.opt_state, b)
+                trained += 1
+            # wait for the batch to accumulate, then run inference
+            now = time.time() - start
+            if now < batch_ready:
+                time.sleep(batch_ready - now)
+            self.server.infer().block_until_ready()
+            done = time.time() - start
+            latencies.extend(done - arrival(i) for i in
+                             range(next_arrival_idx, next_arrival_idx + bs))
+            next_arrival_idx += bs
+            now = time.time() - start
+
+        return ExecutionReport("managed-real", latencies, trained,
+                               max(now, 1e-9), power=0.0)

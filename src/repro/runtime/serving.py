@@ -1,0 +1,99 @@
+"""Serving engine: request queue, minibatch batcher, and two server kinds:
+
+ * BatchInferenceServer — the paper's inference semantics: independent
+   requests batched into one forward pass (vision/classification style).
+ * GenerationServer — LLM-style prefill + decode against the ring-buffer
+   KV/SSM caches (exercises model.prefill / model.decode_step end-to-end).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import make_batch
+from repro.models import model as M
+
+
+@dataclasses.dataclass
+class Request:
+    arrival: float
+    payload: dict
+    done: float = -1.0
+
+    @property
+    def latency(self) -> float:
+        return self.done - self.arrival
+
+
+class RequestQueue:
+    """Arrival-stamped FIFO; supports synthetic constant/trace-driven feeds."""
+
+    def __init__(self):
+        self.q: deque[Request] = deque()
+
+    def push(self, payload: dict, now: Optional[float] = None):
+        self.q.append(Request(now if now is not None else time.time(), payload))
+
+    def ready(self, bs: int) -> bool:
+        return len(self.q) >= bs
+
+    def pop_batch(self, bs: int) -> list[Request]:
+        return [self.q.popleft() for _ in range(bs)]
+
+    def __len__(self):
+        return len(self.q)
+
+
+class BatchInferenceServer:
+    """One jitted forward per minibatch of bs requests."""
+
+    def __init__(self, cfg: M.ModelConfig, seq_len: int, bs: int, seed: int = 0):
+        self.cfg, self.seq_len, self.bs = cfg, seq_len, bs
+        self.params = M.init_params(jax.random.key(seed), cfg)
+        self._fwd = jax.jit(lambda p, b: M.forward(p, b, cfg)[0])
+        # warm the compile cache
+        self._fwd(self.params, make_batch(cfg, seq_len, bs, "prefill")).block_until_ready()
+
+    def infer(self, batch: Optional[dict] = None) -> jax.Array:
+        batch = batch or make_batch(self.cfg, self.seq_len, self.bs, "prefill")
+        return self._fwd(self.params, batch)
+
+    def minibatch_time(self, iters: int = 3) -> float:
+        t0 = time.time()
+        for _ in range(iters):
+            self.infer().block_until_ready()
+        return (time.time() - t0) / iters
+
+
+class GenerationServer:
+    """Prefill + token-by-token decode using the model's serving caches."""
+
+    def __init__(self, cfg: M.ModelConfig, max_seq: int, bs: int, seed: int = 0):
+        self.cfg, self.max_seq, self.bs = cfg, max_seq, bs
+        self.params = M.init_params(jax.random.key(seed), cfg)
+        self._prefill = jax.jit(lambda p, b: M.prefill(p, b, cfg, max_seq))
+        self._decode = jax.jit(lambda p, c, b, pos: M.decode_step(p, c, b, pos, cfg))
+
+    def generate(self, prompt: dict, steps: int, prompt_len: int) -> np.ndarray:
+        logits, cache = self._prefill(self.params, prompt)
+        tokens = []
+        pos = jnp.full((self.bs,), prompt_len, jnp.int32)
+        for _ in range(steps):
+            nxt = jnp.argmax(logits[:, -1:] if logits.ndim == 3 else
+                             logits[:, -1:, 0], axis=-1).astype(jnp.int32)
+            if self.cfg.arch_type == "audio":
+                nxt = jnp.broadcast_to(nxt[..., None],
+                                       (self.bs, 1, self.cfg.n_codebooks))
+            logits, cache = self._decode(self.params, cache,
+                                         {"tokens": nxt.reshape(self.bs, 1, -1)
+                                          if self.cfg.arch_type == "audio"
+                                          else nxt.reshape(self.bs, 1)}, pos)
+            pos = pos + 1
+            tokens.append(np.asarray(nxt).reshape(self.bs, -1)[:, 0])
+        return np.stack(tokens, axis=1)

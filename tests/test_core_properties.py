@@ -1,0 +1,184 @@
+"""Property-based (hypothesis) + invariant tests for the Fulcrum core."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import problem as P
+from repro.core.device_model import (DeviceModel, INFER_WORKLOADS, Profiler,
+                                     TRAIN_WORKLOADS)
+from repro.core.gmd import ConcurrentProfiler, GMDConcurrent, GMDInfer, GMDTrain
+from repro.core.oracle import Oracle
+from repro.core.pareto import front_lookup, pareto_front
+from repro.core.powermode import DIMS, PowerMode, PowerModeSpace
+
+DEV = DeviceModel()
+SPACE = PowerModeSpace()
+ORACLE = Oracle(DEV)
+
+mode_st = st.builds(
+    PowerMode,
+    cores=st.sampled_from(SPACE.values["cores"]),
+    cpuf=st.sampled_from(SPACE.values["cpuf"]),
+    gpuf=st.sampled_from(SPACE.values["gpuf"]),
+    memf=st.sampled_from(SPACE.values["memf"]),
+)
+workload_st = st.sampled_from(list(TRAIN_WORKLOADS.values())
+                              + list(INFER_WORKLOADS.values()))
+
+
+@given(mode_st, workload_st, st.sampled_from(DIMS))
+@settings(max_examples=200, deadline=None)
+def test_power_monotone_time_antitone_along_every_dimension(pm, w, dim):
+    """The property GMD's half-line pruning relies on (§5.1.2): power rises
+    and minibatch time falls along every dimension — up to measurement noise
+    (~1.5%), which the real board also exhibits and which GMD's slope
+    thresholding (POWER_SLOPE_EPS, §5.1.2 "thresholding logic") absorbs."""
+    vals = SPACE.values[dim]
+    idx = vals.index(pm.value(dim))
+    if idx + 1 >= len(vals):
+        return
+    hi = pm.replace(**{dim: vals[idx + 1]})
+    t_lo, p_lo = DEV.time_power(w, pm, 16 if w.kind == "infer" else None)
+    t_hi, p_hi = DEV.time_power(w, hi, 16 if w.kind == "infer" else None)
+    assert p_hi >= p_lo - 0.015 * p_lo - 1e-9
+    # time noise is +-5% per (workload, dim-value): adjacent flat segments
+    # (e.g. cores beyond the dataloader parallelism) can swing ~10%
+    assert t_hi <= t_lo + 0.10 * t_lo + 1e-9
+
+
+@given(workload_st, mode_st, st.sampled_from([1, 4, 16, 32, 64]))
+@settings(max_examples=100, deadline=None)
+def test_inference_time_increases_sublinearly_with_bs(w, pm, bs):
+    t1, _ = DEV.time_power(w, pm, 1)
+    tb, _ = DEV.time_power(w, pm, bs)
+    assert tb >= t1 - 1e-12            # more samples never faster
+    assert tb <= t1 * bs + 1e-9        # sublinear growth (paper §2)
+
+
+@given(st.dictionaries(st.integers(0, 1000),
+                       st.tuples(st.floats(1, 100), st.floats(0.001, 10)),
+                       min_size=1, max_size=40))
+@settings(max_examples=100, deadline=None)
+def test_pareto_front_invariants(points):
+    front = pareto_front(points)
+    assert front                                  # never empty
+    assert set(front) <= set(points)
+    # no front point dominates another front point
+    items = list(front.values())
+    for i, (p1, t1) in enumerate(items):
+        for j, (p2, t2) in enumerate(items):
+            if i != j:
+                assert not (p2 <= p1 and t2 < t1)
+    # every non-front point is dominated by some front point
+    for key, (p, t) in points.items():
+        if key not in front:
+            assert any(p2 <= p and t2 <= t for (p2, t2) in items)
+
+
+@given(st.floats(10, 60), st.floats(1, 100), st.floats(0.001, 10))
+@settings(max_examples=100, deadline=None)
+def test_front_lookup_matches_exhaustive(budget, pw, tm):
+    points = {0: (pw, tm), 1: (pw * 0.5, tm * 2), 2: (pw * 1.5, tm * 0.7)}
+    front = pareto_front(points)
+    hit = front_lookup(front, budget)
+    feas = [(t, k) for k, (p, t) in points.items() if p <= budget]
+    if hit is None:
+        # no front point fits; then no point at all can beat the front ones
+        assert not feas or min(f[0] for f in feas) >= min(
+            t for (p, t) in points.values())
+    else:
+        assert hit[1][0] <= budget
+        assert math.isclose(hit[1][1], min(f[0] for f in feas), rel_tol=1e-9)
+
+
+@given(st.integers(1, 64), st.floats(1, 120), st.floats(0.001, 2),
+       st.floats(0.001, 2))
+@settings(max_examples=200, deadline=None)
+def test_interleaving_math(bs, rate, t_in, t_tr):
+    lam = P.peak_latency(bs, rate, t_in)
+    assert lam >= t_in                      # queueing only adds latency
+    tau = P.interleave_tau(bs, rate, t_in, t_tr)
+    assert tau >= 0
+    # tau training steps + the inference step must fit in the cycle
+    if P.sustainable(bs, rate, t_in):
+        assert tau * t_tr + t_in <= bs / rate + 1e-6
+    theta = P.train_throughput(bs, rate, t_in, t_tr)
+    assert theta * t_tr <= 1.0 + 1e-9       # can't train more than wall time
+
+
+# ---------------------------------------------------------------------------
+# strategy invariants (paper: profiling-based strategies NEVER violate
+# budgets; oracle dominates every strategy)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("budget", [12.0, 20.0, 30.0, 45.0])
+def test_gmd_train_never_violates_and_oracle_dominates(budget):
+    w = TRAIN_WORKLOADS["mobilenet"]
+    prob = P.TrainProblem(budget)
+    sol = GMDTrain(Profiler(DEV, w)).solve(prob)
+    opt = ORACLE.solve_train(w, prob)
+    if sol is not None:
+        assert sol.power <= budget + 1e-9
+        t_true, p_true = DEV.time_power(w, sol.pm)
+        assert abs(t_true - sol.time) < 1e-9     # observed == ground truth
+        if opt is not None:
+            assert opt.time <= sol.time + 1e-9   # oracle dominates
+
+
+@pytest.mark.parametrize("budget,lat,rate", [(20, 0.5, 30), (35, 0.2, 60),
+                                             (45, 1.0, 90), (15, 0.3, 50)])
+def test_gmd_infer_never_violates(budget, lat, rate):
+    w = INFER_WORKLOADS["mobilenet"]
+    prob = P.InferProblem(float(budget), lat, float(rate))
+    sol = GMDInfer(Profiler(DEV, w)).solve(prob)
+    if sol is not None:
+        assert sol.power <= budget + 1e-9
+        assert sol.time <= lat + 1e-9
+        t_true, _ = DEV.time_power(w, sol.pm, sol.bs)
+        assert P.sustainable(sol.bs, rate, t_true)
+
+
+@pytest.mark.parametrize("budget,lat,rate", [(30, 1.0, 60), (45, 2.0, 120)])
+def test_gmd_concurrent_never_violates(budget, lat, rate):
+    w_tr = TRAIN_WORKLOADS["mobilenet"]
+    w_in = INFER_WORKLOADS["mobilenet"]
+    prob = P.ConcurrentProblem(float(budget), lat, float(rate))
+    cp = ConcurrentProfiler(Profiler(DEV, w_tr), Profiler(DEV, w_in))
+    sol = GMDConcurrent(cp).solve(prob)
+    if sol is not None:
+        assert sol.power <= budget + 1e-9
+        assert sol.time <= lat + 1e-9
+        assert cp.num_runs <= 15 + 5   # branch&bound probes + search budget
+
+
+def test_solver_agrees_with_bruteforce_on_tiny_space():
+    """solve_train == brute force over an exhaustive observation set."""
+    w = TRAIN_WORKLOADS["lstm"]
+    small = PowerModeSpace(cores=[4, 12], cpuf=[422, 2201],
+                           gpuf=[115, 1300], memf=[665, 3199])
+    obs = {pm: DEV.time_power(w, pm) for pm in small.all_modes()}
+    for budget in (15.0, 25.0, 40.0):
+        sol = P.solve_train(P.TrainProblem(budget), obs)
+        feas = [(t, pm) for pm, (t, p) in obs.items() if p <= budget]
+        if not feas:
+            assert sol is None
+        else:
+            assert sol is not None
+            assert math.isclose(sol.time, min(feas)[0], rel_tol=1e-12)
+
+
+def test_managed_interleaving_latency_within_budget():
+    """Fig. 2 claim: managed interleaving keeps every request within the
+    latency bound predicted by the formulation."""
+    from repro.core.interleave import simulate_managed
+    w_tr = TRAIN_WORKLOADS["mobilenet"]
+    w_in = INFER_WORKLOADS["mobilenet"]
+    pm = SPACE.maxn()
+    bs, rate = 16, 60.0
+    rep = simulate_managed(DEV, w_tr, w_in, pm, bs, rate, duration=30.0)
+    t_in, _ = DEV.time_power(w_in, pm, bs)
+    lam = P.peak_latency(bs, rate, t_in)
+    assert rep.latencies
+    assert max(rep.latencies) <= lam + 1e-6
+    assert rep.train_minibatches > 0

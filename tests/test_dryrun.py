@@ -1,0 +1,52 @@
+"""Multi-pod dry-run machinery: subprocess smoke (real 512-device lowering
+for one pair) + collective-parser and extrapolation unit tests."""
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.launch.dryrun import _lin_extrapolate, collective_bytes
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def test_collective_parser_counts_operands():
+    hlo = """
+  %ag = bf16[32,1024]{1,0} all-gather(bf16[2,1024]{1,0} %x), replica_groups={}
+  %ar.1 = f32[128]{0} all-reduce(f32[128]{0} %y), to_apply=%sum
+  %rs = f32[8,16]{1,0} reduce-scatter(f32[128,16]{1,0} %z), dimensions={0}
+  %nothing = f32[4]{0} add(f32[4]{0} %a, f32[4]{0} %b)
+"""
+    out = collective_bytes(hlo)
+    assert out["all-gather"] == 2 * 1024 * 2        # operand, not output
+    assert out["all-reduce"] == 128 * 4
+    assert out["reduce-scatter"] == 128 * 16 * 4
+    assert out["counts"]["all-gather"] == 1
+    assert out["total"] == out["all-gather"] + out["all-reduce"] + out["reduce-scatter"]
+
+
+def test_linear_extrapolation():
+    # f(L) = 10 + 3L sampled at L=2,4 must recover f(48)
+    assert _lin_extrapolate(16.0, 22.0, 2, 4, 48) == pytest.approx(10 + 3 * 48)
+
+
+@pytest.mark.slow
+def test_dryrun_subprocess_one_pair(tmp_path):
+    """Full 512-placeholder-device lowering for one (arch x shape x mesh):
+    proves the production mesh machinery works end to end."""
+    out = tmp_path / "dry.json"
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", "stablelm-1.6b", "--shape", "decode_32k",
+         "--mesh", "multi", "--out", str(out)],
+        cwd=REPO, env={**os.environ, "PYTHONPATH": str(REPO / "src")},
+        capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, proc.stdout[-2000:] + proc.stderr[-2000:]
+    rec = json.loads(out.read_text())["stablelm-1.6b|decode_32k|multi"]
+    assert rec["ok"], rec
+    assert rec["devices"] == 512
+    assert rec["extrapolated"]["flops"] > 0
+    assert rec["extrapolated"]["collective_bytes"] > 0

@@ -1,0 +1,49 @@
+"""GMD-for-TPU (beyond-paper adaptation) tests."""
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.core.tpu_adapter import (GMDForTPU, RooflineTPUModel, TPUKnobSpace,
+                                    exhaustive_best)
+from repro.launch.mesh import HBM_BYTES
+
+
+def test_hbm_monotone_in_every_knob():
+    """The resource-monotonicity GMD pruning requires."""
+    m = RooflineTPUModel(get_config("qwen2.5-14b"), 4096, 256, "train")
+    sp = TPUKnobSpace()
+    for dim, vals in sp.values.items():
+        base = sp.midpoint()
+        prev = None
+        for v in vals:
+            _, hbm = m.time_power(base.replace(**{dim: v}))
+            if prev is not None:
+                assert hbm >= prev - 1e-6, (dim, v)
+            prev = hbm
+
+
+@pytest.mark.parametrize("arch", ["qwen2.5-14b", "mamba2-780m", "stablelm-12b",
+                                  "zamba2-1.2b", "minitron-4b"])
+def test_gmd_tpu_close_to_oracle(arch):
+    m = RooflineTPUModel(get_config(arch), 4096, 256, "train")
+    g = GMDForTPU(m)
+    sol = g.solve()
+    opt = exhaustive_best(m)
+    assert sol is not None and opt is not None
+    assert sol.power <= HBM_BYTES           # never violates the HBM budget
+    assert sol.time <= opt[1] * 1.25        # within 25% of the knob oracle
+    assert g.num_profiles <= 18             # few "profiles", as on the Jetson
+
+
+def test_arctic_needs_multipod():
+    """arctic-480b + fp32 Adam cannot fit one 256-chip pod; fits 512."""
+    cfg = get_config("arctic-480b")
+    assert exhaustive_best(RooflineTPUModel(cfg, 4096, 256, "train", 256),
+                           TPUKnobSpace(256)) is None
+    assert exhaustive_best(RooflineTPUModel(cfg, 4096, 256, "train", 512),
+                           TPUKnobSpace(512)) is not None
+
+
+def test_all_archs_have_a_serving_config():
+    for arch in ARCH_IDS:
+        m = RooflineTPUModel(get_config(arch), 32768, 32, "prefill")
+        assert exhaustive_best(m) is not None, arch
