@@ -1,5 +1,8 @@
 """Paper Fig. 11: concurrent training+inference — % training-throughput loss
-vs optimal, per strategy, over the paper's 5 {train, infer} DNN pairs."""
+vs optimal, per strategy, over the paper's 5 {train, infer} DNN pairs.
+
+Oracle optima and fitted-strategy answers for the whole sweep come from one
+batched reduction each (core.grid_eval); GMD profiles per problem."""
 from __future__ import annotations
 
 from repro.core import problem as P
@@ -8,8 +11,8 @@ from repro.core.baselines import NNConcurrentBaseline, RNDConcurrent
 from repro.core.device_model import INFER_WORKLOADS, Profiler, TRAIN_WORKLOADS
 from repro.core.gmd import ConcurrentProfiler, GMDConcurrent
 
-from benchmarks.common import DEV, ORACLE, SPACE, loss_pct, median, row, \
-    concurrent_problem_grid
+from benchmarks.common import BACKEND, DEV, ORACLE, SPACE, loss_pct, \
+    median, row, concurrent_problem_grid
 
 # {train, infer} pairs from §7.3
 PAIRS = [("yolov8n", "resnet50"), ("resnet18", "mobilenet"),
@@ -34,6 +37,10 @@ def run(full: bool = False, pairs=None) -> list[str]:
         w_tr, w_in = TRAIN_WORKLOADS[tr_name], INFER_WORKLOADS[in_name]
         bert = in_name == "bert"
         probs = concurrent_problem_grid(full, bert=bert)
+        opts = ORACLE.solve_concurrent_batch(w_tr, w_in, probs, backend=BACKEND)
+        solvable_pairs = [(prob, opt) for prob, opt in zip(probs, opts)
+                          if opt is not None and opt.throughput > 0]
+        solvable = len(solvable_pairs)
         fitted = {
             "als145": ALSConcurrent(_cp(w_tr, w_in), _quadrants(bert), SPACE,
                                     nn_epochs=NN_EPOCHS),
@@ -44,20 +51,17 @@ def run(full: bool = False, pairs=None) -> list[str]:
         }
         strategies = {"gmd15": None, **fitted}
         for sname, strat in strategies.items():
-            losses, viols, solved, solvable = [], 0, 0, 0
-            for prob in probs:
-                opt = ORACLE.solve_concurrent(w_tr, w_in, prob)
-                if opt is None or opt.throughput <= 0:
-                    continue
-                solvable += 1
-                if sname == "gmd15":
-                    sol = GMDConcurrent(_cp(w_tr, w_in), SPACE).solve(prob)
-                else:
-                    sol = strat.solve(prob)
+            losses, viols, solved = [], 0, 0
+            if sname == "gmd15":
+                sols = [GMDConcurrent(_cp(w_tr, w_in), SPACE).solve(prob)
+                        for prob, _ in solvable_pairs]
+            else:
+                sols = strat.solve_batch([prob for prob, _ in solvable_pairs])
+            for (prob, opt), sol in zip(solvable_pairs, sols):
                 if sol is None:
                     continue
-                t_in, p_in = DEV.time_power(w_in, sol.pm, sol.bs)
-                t_tr, p_tr = DEV.time_power(w_tr, sol.pm)
+                t_in, p_in = ORACLE.true_infer(w_in, sol.pm, sol.bs)
+                t_tr, p_tr = ORACLE.true_train(w_tr, sol.pm)
                 lam = P.peak_latency(sol.bs, prob.arrival_rate, t_in)
                 if (max(p_in, p_tr) > prob.power_budget + 1e-9
                         or lam > prob.latency_budget + 1e-9

@@ -2,7 +2,8 @@
 throughput subject to the urgent inference's latency deadline and the power
 budget. Pairs {non-urgent, urgent}: {ResNet50, BERT} and {ResNet50, MNet}
 modeled as the concurrent problem with the non-urgent batch inference
-(fixed bs=32) playing the training role (§5.4)."""
+(fixed bs=32) playing the training role (§5.4). Oracle optima and fitted
+strategies answer the whole sweep via batched grid reductions."""
 from __future__ import annotations
 
 import dataclasses
@@ -13,8 +14,8 @@ from repro.core.baselines import NNConcurrentBaseline, RNDConcurrent
 from repro.core.device_model import INFER_WORKLOADS, Profiler
 from repro.core.gmd import ConcurrentProfiler, GMDConcurrent
 
-from benchmarks.common import DEV, ORACLE, SPACE, loss_pct, median, row, \
-    concurrent_problem_grid
+from benchmarks.common import BACKEND, DEV, ORACLE, SPACE, loss_pct, \
+    median, row, concurrent_problem_grid
 
 NN_EPOCHS = 300
 PAIRS = [("resnet50", "bert"), ("resnet50", "mobilenet")]
@@ -32,6 +33,10 @@ def run(full: bool = False) -> list[str]:
         w_u = INFER_WORKLOADS[u_name]
         bert = u_name == "bert"
         probs = concurrent_problem_grid(full, bert=bert)
+        opts = ORACLE.solve_concurrent_batch(w_nu, w_u, probs, backend=BACKEND)
+        solvable_pairs = [(prob, opt) for prob, opt in zip(probs, opts)
+                          if opt is not None and opt.throughput > 0]
+        solvable = len(solvable_pairs)
         quad = (QuadrantRanges((2.0, 6.0), (1.0, 15.0)) if bert
                 else QuadrantRanges((0.5, 2.0), (30.0, 120.0)))
         mk = lambda: ConcurrentProfiler(Profiler(DEV, w_nu), Profiler(DEV, w_u))
@@ -43,18 +48,17 @@ def run(full: bool = False) -> list[str]:
         }
         strategies = {"gmd15": None, **fitted}
         for sname, strat in strategies.items():
-            losses, solved, solvable = [], 0, 0
-            for prob in probs:
-                opt = ORACLE.solve_concurrent(w_nu, w_u, prob)
-                if opt is None or opt.throughput <= 0:
-                    continue
-                solvable += 1
-                sol = (GMDConcurrent(mk(), SPACE).solve(prob)
-                       if sname == "gmd15" else strat.solve(prob))
+            losses, solved = [], 0
+            if sname == "gmd15":
+                sols = [GMDConcurrent(mk(), SPACE).solve(prob)
+                        for prob, _ in solvable_pairs]
+            else:
+                sols = strat.solve_batch([prob for prob, _ in solvable_pairs])
+            for (prob, opt), sol in zip(solvable_pairs, sols):
                 if sol is None:
                     continue
-                t_u, p_u = DEV.time_power(w_u, sol.pm, sol.bs)
-                t_nu, p_nu = DEV.time_power(w_nu, sol.pm)
+                t_u, p_u = ORACLE.true_infer(w_u, sol.pm, sol.bs)
+                t_nu, p_nu = ORACLE.true_train(w_nu, sol.pm)
                 lam = P.peak_latency(sol.bs, prob.arrival_rate, t_u)
                 if (max(p_u, p_nu) > prob.power_budget + 1e-9
                         or lam > prob.latency_budget + 1e-9

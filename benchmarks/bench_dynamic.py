@@ -13,7 +13,8 @@ from repro.core.baselines import NNInferBaseline, RNDInfer
 from repro.core.device_model import INFER_WORKLOADS, Profiler
 from repro.core.scheduler import Fulcrum
 
-from benchmarks.common import DEV, ORACLE, SPACE, excess_pct, median, row
+from benchmarks.common import BACKEND, DEV, ORACLE, SPACE, excess_pct, \
+    median, row
 
 POWER, LATENCY = 40.0, 0.1
 NN_EPOCHS = 300
@@ -50,22 +51,21 @@ def run(full: bool = False, dnns=None) -> list[str]:
         for trace_name, rates in traces.items():
             # GMD: shared profiling history across windows (§5.4)
             f = Fulcrum(DEV, SPACE)
+            probs = [P.InferProblem(POWER, LATENCY, r) for r in rates]
+            opts = ORACLE.solve_infer_batch(w, probs, backend=BACKEND)
             strategies = {"gmd": None, **fitted}
             for sname, strat in strategies.items():
                 exc, found = [], 0
                 if sname == "gmd":
                     sols = f.solve_dynamic(w, POWER, LATENCY, rates, "gmd")
                 else:
-                    sols = [strat.solve(P.InferProblem(POWER, LATENCY, r))
-                            for r in rates]
-                for sol, rate in zip(sols, rates):
-                    prob = P.InferProblem(POWER, LATENCY, rate)
-                    opt = ORACLE.solve_infer(w, prob)
+                    sols = strat.solve_batch(probs)
+                for sol, rate, opt in zip(sols, rates, opts):
                     if opt is None:
                         continue
                     if sol is None:
                         continue
-                    t_true, p_true = DEV.time_power(w, sol.pm, sol.bs)
+                    t_true, p_true = ORACLE.true_infer(w, sol.pm, sol.bs)
                     lam = P.peak_latency(sol.bs, rate, t_true)
                     if (p_true > POWER + 1e-9 or lam > LATENCY + 1e-9
                             or not P.sustainable(sol.bs, rate, t_true)):

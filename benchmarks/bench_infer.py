@@ -1,5 +1,8 @@
 """Paper Fig. 10: standalone inference — excess-over-optimal latency, %
-problems solved, budget violations, per strategy."""
+problems solved, budget violations, per strategy.
+
+The (power x latency x arrival-rate) sweep is solved in one batched
+reduction per strategy (core.grid_eval); only GMD profiles per problem."""
 from __future__ import annotations
 
 from repro.core import problem as P
@@ -8,8 +11,8 @@ from repro.core.baselines import NNInferBaseline, RNDInfer
 from repro.core.device_model import INFER_WORKLOADS, Profiler
 from repro.core.gmd import GMDInfer
 
-from benchmarks.common import DEV, ORACLE, SPACE, excess_pct, median, row, \
-    infer_problem_grid
+from benchmarks.common import BACKEND, DEV, ORACLE, SPACE, excess_pct, \
+    median, row, infer_problem_grid
 
 NN_EPOCHS = 300
 
@@ -26,6 +29,10 @@ def run(full: bool = False, dnns=None) -> list[str]:
         w = INFER_WORKLOADS[name]
         bert = name == "bert"
         probs = infer_problem_grid(full, bert=bert)
+        opts = ORACLE.solve_infer_batch(w, probs, backend=BACKEND)
+        solvable_pairs = [(prob, opt) for prob, opt in zip(probs, opts)
+                          if opt is not None]
+        solvable = len(solvable_pairs)
         fitted = {
             "als145": ALSInfer(Profiler(DEV, w), _quadrants(bert), SPACE,
                                nn_epochs=NN_EPOCHS),
@@ -36,19 +43,16 @@ def run(full: bool = False, dnns=None) -> list[str]:
         }
         strategies = {"gmd11": None, **fitted}
         for sname, strat in strategies.items():
-            exc, viols, solved, solvable = [], 0, 0, 0
-            for prob in probs:
-                opt = ORACLE.solve_infer(w, prob)
-                if opt is None:
-                    continue
-                solvable += 1
-                if sname == "gmd11":
-                    sol = GMDInfer(Profiler(DEV, w), SPACE).solve(prob)
-                else:
-                    sol = strat.solve(prob)
+            exc, viols, solved = [], 0, 0
+            if sname == "gmd11":
+                sols = [GMDInfer(Profiler(DEV, w), SPACE).solve(prob)
+                        for prob, _ in solvable_pairs]
+            else:
+                sols = strat.solve_batch([prob for prob, _ in solvable_pairs])
+            for (prob, opt), sol in zip(solvable_pairs, sols):
                 if sol is None:
                     continue
-                t_true, p_true = DEV.time_power(w, sol.pm, sol.bs)
+                t_true, p_true = ORACLE.true_infer(w, sol.pm, sol.bs)
                 lam_true = P.peak_latency(sol.bs, prob.arrival_rate, t_true)
                 if (p_true > prob.power_budget + 1e-9
                         or lam_true > prob.latency_budget + 1e-9

@@ -1,0 +1,118 @@
+"""Solver microbenchmark: configs solved per second, scalar reference loop vs
+the vectorized grid engine (NumPy and jax backends), on the paper-scale
+(--full) problem grids against the dense 441-mode x 5-bs observation grid.
+
+The scalar loop is timed on a subsample (it is the hours-scale path the
+engine replaces) and extrapolated to configs/s; the vectorized paths solve
+the *entire* sweep. Results are printed as CSV rows and snapshotted to
+``benchmarks/results/BENCH_solver.json`` so the speedup is tracked across
+PRs."""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+from repro.core import grid_eval as G
+from repro.core import problem as P
+from repro.core.device_model import INFER_WORKLOADS, TRAIN_WORKLOADS
+
+from benchmarks.common import ORACLE, row, concurrent_problem_grid, \
+    infer_problem_grid, train_problem_grid
+
+SNAPSHOT = Path(__file__).parent / "results" / "BENCH_solver.json"
+SCALAR_SAMPLE = 60          # scalar-loop problems timed per variant
+
+
+def _time_scalar(solve_one, probs) -> float:
+    sample = probs[:: max(1, len(probs) // SCALAR_SAMPLE)][:SCALAR_SAMPLE]
+    t0 = time.perf_counter()
+    for pr in sample:
+        solve_one(pr)
+    dt = time.perf_counter() - t0
+    return len(sample) / dt
+
+
+def _time_batch(solve_batch, probs, backend: str) -> float:
+    solve_batch(probs[:8], backend)         # warm caches / jit compile
+    t0 = time.perf_counter()
+    solve_batch(probs, backend)
+    return len(probs) / (time.perf_counter() - t0)
+
+
+def _variant(name, probs, solve_one, solve_batch, results, rows):
+    scalar = _time_scalar(solve_one, probs)
+    numpy_ = _time_batch(solve_batch, probs, "numpy")
+    try:
+        jax_ = _time_batch(solve_batch, probs, "jax")
+    except RuntimeError:                    # jax unavailable: record honestly
+        jax_ = None
+    rec = {"problems": len(probs),
+           "scalar_configs_per_s": scalar,
+           "numpy_configs_per_s": numpy_,
+           "speedup_numpy": numpy_ / scalar}
+    if jax_ is not None:
+        rec["jax_configs_per_s"] = jax_
+        rec["speedup_jax"] = jax_ / scalar
+    results[name] = rec
+    rows.append(row(f"solver/{name}/speedup_numpy", rec["speedup_numpy"],
+                    f"scalar={scalar:.0f}cfg/s;numpy={numpy_:.0f}cfg/s;"
+                    f"n={len(probs)}"))
+    if jax_ is not None:
+        rows.append(row(f"solver/{name}/speedup_jax", rec["speedup_jax"],
+                        f"jax={jax_:.0f}cfg/s"))
+
+
+def run(full: bool = False) -> list[str]:
+    # the microbenchmark always measures at paper scale: the whole point is
+    # the --full-size sweep as one array program
+    w_tr = TRAIN_WORKLOADS["resnet18"]
+    w_in = INFER_WORKLOADS["mobilenet"]
+    tgrid = ORACLE.train_grid(w_tr)
+    igrid = ORACLE.infer_grid(w_in)
+    tobs, iobs = tgrid.to_dict(), igrid.to_dict()
+
+    rows: list[str] = []
+    results: dict = {"observations": {"train_modes": len(tgrid),
+                                      "infer_entries": len(igrid)}}
+
+    _variant("train", train_problem_grid(True),
+             lambda pr: P.solve_train(pr, tobs),
+             lambda ps, b: G.solve_train_batch(ps, tgrid, b),
+             results, rows)
+    _variant("infer", infer_problem_grid(True),
+             lambda pr: P.solve_infer(pr, iobs),
+             lambda ps, b: G.solve_infer_batch(ps, igrid, b),
+             results, rows)
+    _variant("concurrent", concurrent_problem_grid(True),
+             lambda pr: P.solve_concurrent(pr, tobs, iobs),
+             lambda ps, b: G.solve_concurrent_batch(ps, tgrid, igrid, b),
+             results, rows)
+
+    # headline number: the whole --full sweep (every variant) as one batch
+    # program vs the scalar loop, configs/s weighted by sweep size
+    total = sum(results[v]["problems"] for v in ("train", "infer", "concurrent"))
+    for path in ("scalar", "numpy", "jax"):
+        key = f"{path}_configs_per_s"
+        if any(key not in results[v] for v in ("train", "infer", "concurrent")):
+            continue
+        secs = sum(results[v]["problems"] / results[v][key]
+                   for v in ("train", "infer", "concurrent"))
+        results.setdefault("full_sweep", {})[key] = total / secs
+    fs = results["full_sweep"]
+    fs["problems"] = total
+    fs["speedup_numpy"] = fs["numpy_configs_per_s"] / fs["scalar_configs_per_s"]
+    if "jax_configs_per_s" in fs:
+        fs["speedup_jax"] = fs["jax_configs_per_s"] / fs["scalar_configs_per_s"]
+    rows.append(row("solver/full_sweep/speedup_numpy", fs["speedup_numpy"],
+                    f"n={total};numpy={fs['numpy_configs_per_s']:.0f}cfg/s"))
+
+    SNAPSHOT.parent.mkdir(parents=True, exist_ok=True)
+    SNAPSHOT.write_text(json.dumps(results, indent=1))
+    rows.append(row("solver/snapshot", 1, str(SNAPSHOT)))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

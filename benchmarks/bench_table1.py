@@ -46,7 +46,7 @@ def run(full: bool = False) -> list[str]:
     total = 0
     for name, wk in INFER_WORKLOADS.items():
         for budget in (15.0, 25.0, 35.0, 45.0):
-            t, p = DEV.time_power(wk, maxn, 1)
+            t, p = ORACLE.true_infer(wk, maxn, 1)
             total += 1
             if p > budget:
                 viol += 1

@@ -1,5 +1,9 @@
 """Paper Fig. 9: standalone training — excess-over-optimal minibatch time and
-power-budget violations, per strategy, across the power-budget sweep."""
+power-budget violations, per strategy, across the power-budget sweep.
+
+Oracle optima and fitted-strategy answers are computed for the whole
+power-budget sweep in one batched reduction (core.grid_eval); only GMD, which
+profiles per problem, still runs problem-by-problem."""
 from __future__ import annotations
 
 from repro.core import problem as P
@@ -8,8 +12,8 @@ from repro.core.baselines import NNTrainBaseline, RNDTrain
 from repro.core.device_model import Profiler, TRAIN_WORKLOADS
 from repro.core.gmd import GMDTrain
 
-from benchmarks.common import DEV, ORACLE, SPACE, excess_pct, median, row, \
-    train_problem_grid
+from benchmarks.common import BACKEND, DEV, ORACLE, SPACE, excess_pct, \
+    median, row, train_problem_grid
 
 NN_EPOCHS = 300
 
@@ -19,6 +23,9 @@ def run(full: bool = False, dnns=None) -> list[str]:
     for name in (dnns or TRAIN_WORKLOADS):
         w = TRAIN_WORKLOADS[name]
         probs = train_problem_grid(full, bert=(name == "bert"))
+        opts = ORACLE.solve_train_batch(w, probs, backend=BACKEND)
+        solvable = [(prob, opt) for prob, opt in zip(probs, opts)
+                    if opt is not None]
         fitted = {
             "als50": ALSTrain(Profiler(DEV, w), SPACE, nn_epochs=NN_EPOCHS),
             "rnd50": RNDTrain(Profiler(DEV, w), 50, SPACE),
@@ -29,20 +36,19 @@ def run(full: bool = False, dnns=None) -> list[str]:
         strategies = {"gmd10": None, **fitted}
         for sname, strat in strategies.items():
             exc, viols, solved, runs = [], 0, 0, []
-            for prob in probs:
-                opt = ORACLE.solve_train(w, prob)
-                if opt is None:
-                    continue
-                if sname == "gmd10":
+            if sname == "gmd10":
+                sols = []
+                for prob, _ in solvable:
                     prof = Profiler(DEV, w)
-                    sol = GMDTrain(prof, SPACE).solve(prob)
+                    sols.append(GMDTrain(prof, SPACE).solve(prob))
                     runs.append(prof.num_runs)
-                else:
-                    sol = strat.solve(prob)
+            else:
+                sols = strat.solve_batch([prob for prob, _ in solvable])
+            for (prob, opt), sol in zip(solvable, sols):
                 if sol is None:
                     continue
                 solved += 1
-                t_true, p_true = DEV.time_power(w, sol.pm)   # ground truth
+                t_true, p_true = ORACLE.true_train(w, sol.pm)  # ground truth
                 if p_true > prob.power_budget + 1e-9:
                     viols += 1
                 exc.append(excess_pct(t_true, opt.time))

@@ -1,6 +1,7 @@
 """Shared helpers for the paper-figure benchmarks."""
 from __future__ import annotations
 
+import os
 import statistics
 from typing import Iterable, Optional
 
@@ -13,6 +14,10 @@ from repro.core.powermode import PowerModeSpace
 DEV = DeviceModel()
 SPACE = PowerModeSpace()
 ORACLE = Oracle(DEV, SPACE)
+
+# Backend for the batched grid reductions (oracle sweeps): "numpy" (default,
+# bitwise-identical reference) or "jax" (jit+vmap, runs on-accelerator).
+BACKEND = os.environ.get("FULCRUM_SOLVER_BACKEND", "numpy")
 
 
 def median(xs: Iterable[float]) -> float:

@@ -13,7 +13,7 @@ import time
 from benchmarks import (bench_arch_fulcrum, bench_concurrent,
                         bench_concurrent_inference, bench_dynamic,
                         bench_infer, bench_interleaving, bench_roofline,
-                        bench_table1, bench_train)
+                        bench_solver, bench_table1, bench_train)
 
 SUITES = {
     "fig2_interleaving": bench_interleaving.run,
@@ -25,6 +25,7 @@ SUITES = {
     "table1_practitioner": bench_table1.run,
     "arch_fulcrum": bench_arch_fulcrum.run,
     "roofline": bench_roofline.run,
+    "solver_microbench": bench_solver.run,
 }
 
 

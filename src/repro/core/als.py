@@ -19,6 +19,7 @@ from typing import Optional
 
 import numpy as np
 
+from repro.core import grid_eval as G
 from repro.core import problem as P
 from repro.core.device_model import Profiler
 from repro.core.gmd import ConcurrentProfiler
@@ -84,10 +85,16 @@ class ALSTrain:
         self._fitted = True
 
     def solve(self, prob: P.TrainProblem) -> Optional[P.Solution]:
+        return self.solve_batch([prob])[0]
+
+    def solve_batch(self, probs, backend: str = "numpy"):
+        """Answer a batch of problems from the observed profiles in one
+        masked reduction (profiling stays point-by-point via the Profiler)."""
         if not self._fitted:
             self.fit()
-        obs = {pm: tp for (pm, _), tp in self.profiler.observed().items()}
-        return P.solve_train(prob, obs)
+        grid = G.cached_grid(self, "_grid", self.profiler.observed_modes(),
+                             "train")
+        return G.solve_train_batch(probs, grid, backend)
 
 
 # ---------------------------------------------------------------------------
@@ -168,9 +175,13 @@ class ALSInfer:
         self._fitted = True
 
     def solve(self, prob: P.InferProblem) -> Optional[P.Solution]:
+        return self.solve_batch([prob])[0]
+
+    def solve_batch(self, probs, backend: str = "numpy"):
         if not self._fitted:
             self.fit()
-        return P.solve_infer(prob, self.profiler.observed())
+        grid = G.cached_grid(self, "_grid", self.profiler.observed(), "infer")
+        return G.solve_infer_batch(probs, grid, backend)
 
 
 # ---------------------------------------------------------------------------
@@ -245,7 +256,13 @@ class ALSConcurrent:
         self._fitted = True
 
     def solve(self, prob: P.ConcurrentProblem) -> Optional[P.Solution]:
+        return self.solve_batch([prob])[0]
+
+    def solve_batch(self, probs, backend: str = "numpy"):
         if not self._fitted:
             self.fit()
-        return P.solve_concurrent(prob, self.cp.train.observed_modes(),
-                                  self.cp.infer.observed())
+        return G.solve_concurrent_batch(
+            probs,
+            G.cached_grid(self, "_tgrid", self.cp.train.observed_modes(), "train"),
+            G.cached_grid(self, "_igrid", self.cp.infer.observed(), "infer"),
+            backend)

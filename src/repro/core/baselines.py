@@ -1,13 +1,21 @@
 """Baseline strategies (paper §6): RND-k random sampling with observed-Pareto
 lookup, and the NN-k prediction-based baseline (PowerTrain-style) whose
-*predicted* Pareto answers queries — and can therefore violate budgets."""
+*predicted* Pareto answers queries — and can therefore violate budgets.
+
+Query answering runs on the vectorized grid engine: after fitting, the
+observed (or predicted) profiles are flattened into an `ObservationGrid`
+once, and `solve`/`solve_batch` are masked reductions over it — a whole
+problem sweep is one array program instead of a per-problem Python scan.
+Profiling itself still goes through the scalar `Profiler`, point by point.
+"""
 from __future__ import annotations
 
 import random
-from typing import Optional
+from typing import Optional, Sequence
 
 import numpy as np
 
+from repro.core import grid_eval as G
 from repro.core import problem as P
 from repro.core.device_model import Profiler
 from repro.core.gmd import ConcurrentProfiler
@@ -31,10 +39,15 @@ class RNDTrain:
         self._fitted = True
 
     def solve(self, prob: P.TrainProblem) -> Optional[P.Solution]:
+        return self.solve_batch([prob])[0]
+
+    def solve_batch(self, probs: Sequence[P.TrainProblem],
+                    backend: str = "numpy") -> list[Optional[P.Solution]]:
         if not self._fitted:
             self.fit()
-        obs = {pm: tp for (pm, _), tp in self.profiler.observed().items()}
-        return P.solve_train(prob, obs)
+        grid = G.cached_grid(self, "_grid", self.profiler.observed_modes(),
+                             "train")
+        return G.solve_train_batch(probs, grid, backend)
 
 
 class RNDInfer:
@@ -57,9 +70,14 @@ class RNDInfer:
         self._fitted = True
 
     def solve(self, prob: P.InferProblem) -> Optional[P.Solution]:
+        return self.solve_batch([prob])[0]
+
+    def solve_batch(self, probs: Sequence[P.InferProblem],
+                    backend: str = "numpy") -> list[Optional[P.Solution]]:
         if not self._fitted:
             self.fit()
-        return P.solve_infer(prob, self.profiler.observed())
+        grid = G.cached_grid(self, "_grid", self.profiler.observed(), "infer")
+        return G.solve_infer_batch(probs, grid, backend)
 
 
 class RNDConcurrent:
@@ -80,10 +98,17 @@ class RNDConcurrent:
         self._fitted = True
 
     def solve(self, prob: P.ConcurrentProblem) -> Optional[P.Solution]:
+        return self.solve_batch([prob])[0]
+
+    def solve_batch(self, probs: Sequence[P.ConcurrentProblem],
+                    backend: str = "numpy") -> list[Optional[P.Solution]]:
         if not self._fitted:
             self.fit()
-        return P.solve_concurrent(prob, self.cp.train.observed_modes(),
-                                  self.cp.infer.observed())
+        return G.solve_concurrent_batch(
+            probs,
+            G.cached_grid(self, "_tgrid", self.cp.train.observed_modes(), "train"),
+            G.cached_grid(self, "_igrid", self.cp.infer.observed(), "infer"),
+            backend)
 
 
 # ---------------------------------------------------------------------------
@@ -112,13 +137,19 @@ class NNTrainBaseline:
         mf = np.array([mode_features(pm) for pm in modes])
         self._pred = {pm: (float(t), float(p))
                       for pm, t, p in zip(modes, nn_t.predict(mf), nn_p.predict(mf))}
+        self._grid = None           # refit replaces predictions wholesale
 
     def solve(self, prob: P.TrainProblem) -> Optional[P.Solution]:
         """Answers from *predicted* values; the returned solution's true
         time/power may violate the budget (evaluated by the benchmark)."""
+        return self.solve_batch([prob])[0]
+
+    def solve_batch(self, probs: Sequence[P.TrainProblem],
+                    backend: str = "numpy") -> list[Optional[P.Solution]]:
         if self._pred is None:
             self.fit()
-        return P.solve_train(prob, self._pred)
+        return G.solve_train_batch(
+            probs, G.cached_grid(self, "_grid", self._pred, "train"), backend)
 
 
 class NNInferBaseline:
@@ -147,11 +178,17 @@ class NNInferBaseline:
         mf = np.array([mode_features(pm, bs) for pm, bs in keys])
         self._pred = {k: (float(t), float(p))
                       for k, t, p in zip(keys, nn_t.predict(mf), nn_p.predict(mf))}
+        self._grid = None           # refit replaces predictions wholesale
 
     def solve(self, prob: P.InferProblem) -> Optional[P.Solution]:
+        return self.solve_batch([prob])[0]
+
+    def solve_batch(self, probs: Sequence[P.InferProblem],
+                    backend: str = "numpy") -> list[Optional[P.Solution]]:
         if self._pred is None:
             self.fit()
-        return P.solve_infer(prob, self._pred)
+        return G.solve_infer_batch(
+            probs, G.cached_grid(self, "_grid", self._pred, "infer"), backend)
 
 
 class NNConcurrentBaseline:
@@ -190,9 +227,16 @@ class NNConcurrentBaseline:
                        zip(keys, nn_ti.predict(imf), nn_pi.predict(imf))}
         self._tpred = {pm: (float(t), float(p)) for pm, t, p in
                        zip(modes, nn_tt.predict(tmf), nn_pt.predict(tmf))}
+        self._tgrid = self._igrid = None   # refit replaces predictions
         self._pred = True
 
     def solve(self, prob: P.ConcurrentProblem) -> Optional[P.Solution]:
+        return self.solve_batch([prob])[0]
+
+    def solve_batch(self, probs: Sequence[P.ConcurrentProblem],
+                    backend: str = "numpy") -> list[Optional[P.Solution]]:
         if self._pred is None:
             self.fit()
-        return P.solve_concurrent(prob, self._tpred, self._ipred)
+        return G.solve_concurrent_batch(
+            probs, G.cached_grid(self, "_tgrid", self._tpred, "train"),
+            G.cached_grid(self, "_igrid", self._ipred, "infer"), backend)

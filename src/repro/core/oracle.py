@@ -1,15 +1,21 @@
 """Ground-truth "optimal" solutions (paper §6): exhaustively evaluate the 441
 uniformly spaced power modes (x 5 inference minibatch sizes) on the device
 model and solve by observed-Pareto lookup. Profiling cost is not charged to
-the oracle — it is the nominal optimum strategies are compared against."""
+the oracle — it is the nominal optimum strategies are compared against.
+
+The oracle runs on the vectorized grid engine (`core.grid_eval`): dense
+time/power tensors are materialized once per workload and every problem
+configuration — or a whole batch of them via ``solve_*_batch`` — is solved as
+a masked reduction, bitwise identical to the scalar `problem.solve_*` loops.
+"""
 from __future__ import annotations
 
-import functools
-from typing import Optional
+from typing import Optional, Sequence
 
+from repro.core import grid_eval as G
 from repro.core import problem as P
 from repro.core.device_model import DeviceModel, WorkloadProfile
-from repro.core.powermode import PowerMode, PowerModeSpace
+from repro.core.powermode import PowerModeSpace
 
 
 class Oracle:
@@ -18,29 +24,74 @@ class Oracle:
         self.device = device
         self.space = space or PowerModeSpace()
         self.batch_sizes = batch_sizes
+        self._train_grids: dict[str, G.ObservationGrid] = {}
+        self._infer_grids: dict[str, G.ObservationGrid] = {}
         self._train_obs: dict[str, dict] = {}
         self._infer_obs: dict[str, dict] = {}
 
+    # -- dense grids (materialized once per workload) -----------------------
+    def train_grid(self, w: WorkloadProfile) -> G.ObservationGrid:
+        if w.name not in self._train_grids:
+            self._train_grids[w.name] = G.materialize(self.device, w, self.space)
+        return self._train_grids[w.name]
+
+    def infer_grid(self, w: WorkloadProfile) -> G.ObservationGrid:
+        if w.name not in self._infer_grids:
+            self._infer_grids[w.name] = G.materialize(
+                self.device, w, self.space, self.batch_sizes)
+        return self._infer_grids[w.name]
+
+    # -- dict views (legacy interface; same insertion order as the grids) ---
     def train_observations(self, w: WorkloadProfile) -> dict:
         if w.name not in self._train_obs:
-            self._train_obs[w.name] = {
-                pm: self.device.time_power(w, pm) for pm in self.space.all_modes()}
+            self._train_obs[w.name] = self.train_grid(w).to_dict()
         return self._train_obs[w.name]
 
     def infer_observations(self, w: WorkloadProfile) -> dict:
         if w.name not in self._infer_obs:
-            self._infer_obs[w.name] = {
-                (pm, bs): self.device.time_power(w, pm, bs)
-                for pm in self.space.all_modes() for bs in self.batch_sizes}
+            self._infer_obs[w.name] = self.infer_grid(w).to_dict()
         return self._infer_obs[w.name]
 
+    # -- ground-truth lookups (no hashing in the hot loop) ------------------
+    def true_train(self, w: WorkloadProfile, pm) -> tuple[float, float]:
+        """Ground-truth (t, p) for a training workload at ``pm``."""
+        grid = self.train_grid(w)
+        if pm in grid.index:
+            return grid.lookup(pm)
+        return self.device.time_power(w, pm)
+
+    def true_infer(self, w: WorkloadProfile, pm, bs: int) -> tuple[float, float]:
+        """Ground-truth (t, p) for an inference workload at ``(pm, bs)``."""
+        grid = self.infer_grid(w)
+        if (pm, bs) in grid.index:
+            return grid.lookup(pm, bs)
+        return self.device.time_power(w, pm, bs)
+
+    # -- single-problem solves (vectorized path, batch of one) --------------
     def solve_train(self, w: WorkloadProfile, prob: P.TrainProblem):
-        return P.solve_train(prob, self.train_observations(w))
+        return self.solve_train_batch(w, [prob])[0]
 
     def solve_infer(self, w: WorkloadProfile, prob: P.InferProblem):
-        return P.solve_infer(prob, self.infer_observations(w))
+        return self.solve_infer_batch(w, [prob])[0]
 
     def solve_concurrent(self, w_tr: WorkloadProfile, w_in: WorkloadProfile,
                          prob: P.ConcurrentProblem):
-        return P.solve_concurrent(prob, self.train_observations(w_tr),
-                                  self.infer_observations(w_in))
+        return self.solve_concurrent_batch(w_tr, w_in, [prob])[0]
+
+    # -- batched solves: the full problem grid in one array program ---------
+    def solve_train_batch(self, w: WorkloadProfile,
+                          probs: Sequence[P.TrainProblem],
+                          backend: str = "numpy") -> list[Optional[P.Solution]]:
+        return G.solve_train_batch(probs, self.train_grid(w), backend)
+
+    def solve_infer_batch(self, w: WorkloadProfile,
+                          probs: Sequence[P.InferProblem],
+                          backend: str = "numpy") -> list[Optional[P.Solution]]:
+        return G.solve_infer_batch(probs, self.infer_grid(w), backend)
+
+    def solve_concurrent_batch(self, w_tr: WorkloadProfile,
+                               w_in: WorkloadProfile,
+                               probs: Sequence[P.ConcurrentProblem],
+                               backend: str = "numpy") -> list[Optional[P.Solution]]:
+        return G.solve_concurrent_batch(probs, self.train_grid(w_tr),
+                                        self.infer_grid(w_in), backend)

@@ -80,6 +80,10 @@ def train_throughput(bs: int, arrival_rate: float, t_in: float, t_tr: float) -> 
 # observed-profile solvers
 # observations: {pm: (t, p)} for training; {(pm, bs): (t, p)} for inference.
 # concurrent: train_obs {pm: (t,p)} + infer_obs {(pm,bs): (t,p)}
+#
+# These are the scalar reference implementations. For sweeps over many
+# problem configurations use core.grid_eval.solve_*_batch — bitwise-identical
+# vectorized counterparts that solve a whole batch as one array program.
 # ---------------------------------------------------------------------------
 
 def solve_train(problem: TrainProblem, obs: dict) -> Optional[Solution]:

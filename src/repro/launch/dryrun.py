@@ -110,7 +110,10 @@ def _compile_once(cfg, shape, mesh, **kw) -> tuple[dict, object]:
     except Exception as e:
         rec["memory"] = {"error": repr(e)}
     try:
-        rec["cost"] = {k: float(v) for k, v in compiled.cost_analysis().items()
+        cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):   # older jax returns [dict]
+            cost = cost[0] if cost else {}
+        rec["cost"] = {k: float(v) for k, v in cost.items()
                        if isinstance(v, (int, float)) and k in
                        ("flops", "bytes accessed", "transcendentals")}
     except Exception as e:

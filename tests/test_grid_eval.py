@@ -1,0 +1,271 @@
+"""Vectorized grid-evaluation engine: bitwise identity against the scalar
+reference (device model, solvers, Pareto utilities) on randomized observation
+grids and problem batches, plus the dense 441-mode x 5-bs oracle sweep."""
+import math
+import random
+
+import numpy as np
+import pytest
+
+from repro.core import grid_eval as G
+from repro.core import problem as P
+from repro.core.device_model import (DeviceModel, INFER_WORKLOADS,
+                                     TRAIN_WORKLOADS)
+from repro.core.oracle import Oracle
+from repro.core.pareto import front_lookup, pareto_front
+from repro.core.powermode import PowerModeSpace
+
+DEV = DeviceModel()
+SPACE = PowerModeSpace()
+BSS = list(P.INFER_BATCH_SIZES)
+
+
+# ---------------------------------------------------------------------------
+# dense device-model tensors
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ["resnet18", "bert"])
+def test_dense_train_grid_bitwise_identical(name):
+    w = TRAIN_WORKLOADS[name]
+    grid = G.materialize(DEV, w, SPACE)
+    for i, pm in enumerate(SPACE.all_modes()):
+        t, p = DEV.time_power(w, pm)
+        assert t == grid.t[i] and p == grid.p[i], pm
+
+
+@pytest.mark.parametrize("name", ["mobilenet", "bert"])
+def test_dense_infer_grid_bitwise_identical(name):
+    w = INFER_WORKLOADS[name]
+    grid = G.materialize(DEV, w, SPACE, BSS)
+    i = 0
+    for pm in SPACE.all_modes():
+        for bs in BSS:
+            t, p = DEV.time_power(w, pm, bs)
+            assert t == grid.t[i] and p == grid.p[i], (pm, bs)
+            assert grid.key(i) == (pm, bs)
+            i += 1
+
+
+def test_grid_lookup_and_dict_roundtrip():
+    w = TRAIN_WORKLOADS["lstm"]
+    grid = G.materialize(DEV, w, SPACE)
+    d = grid.to_dict()
+    assert list(d) == SPACE.all_modes()          # insertion order preserved
+    pm = SPACE.midpoint()
+    assert grid.lookup(pm) == d[pm] == DEV.time_power(w, pm)
+
+
+# ---------------------------------------------------------------------------
+# randomized observation grids: batched solvers == scalar loops, bitwise
+# ---------------------------------------------------------------------------
+
+def _rand_train_obs(rng, modes):
+    sub = rng.sample(modes, rng.randrange(1, 50))
+    # coarse value pools force ties so first-occurrence tie-breaking is hit
+    return {pm: (rng.choice([0.1, 0.25, round(rng.uniform(0.01, 1.0), 3)]),
+                 rng.choice([12.0, 30.0, round(rng.uniform(5.0, 60.0), 2)]))
+            for pm in sub}
+
+
+def _rand_infer_obs(rng, modes):
+    sub = rng.sample(modes, rng.randrange(1, 50))
+    return {(pm, rng.choice(BSS)):
+            (rng.choice([0.05, 0.2, round(rng.uniform(0.005, 2.0), 3)]),
+             rng.choice([15.0, round(rng.uniform(5.0, 60.0), 2)]))
+            for pm in sub for _ in range(2)}
+
+
+def test_solve_train_batch_identical_randomized():
+    rng = random.Random(7)
+    modes = SPACE.all_modes()
+    for _ in range(40):
+        obs = _rand_train_obs(rng, modes)
+        probs = [P.TrainProblem(rng.choice([0.0, 11.0, rng.uniform(1, 70)]))
+                 for _ in range(15)]
+        batched = G.solve_train_batch(probs, obs)
+        scalar = [P.solve_train(pr, obs) for pr in probs]
+        assert batched == scalar
+    # budget below every observed power: all None
+    obs = _rand_train_obs(rng, modes)
+    assert G.solve_train_batch([P.TrainProblem(0.0)], obs) == [None]
+
+
+def test_solve_infer_batch_identical_randomized():
+    rng = random.Random(8)
+    modes = SPACE.all_modes()
+    for _ in range(40):
+        obs = _rand_infer_obs(rng, modes)
+        probs = [P.InferProblem(rng.uniform(1, 70),
+                                rng.choice([0.01, 0.3, 2.0]),
+                                rng.choice([5.0, 30.0, 60.0, 200.0]))
+                 for _ in range(15)]
+        batched = G.solve_infer_batch(probs, obs)
+        scalar = [P.solve_infer(pr, obs) for pr in probs]
+        assert batched == scalar
+
+
+def test_solve_concurrent_batch_identical_randomized():
+    rng = random.Random(9)
+    modes = SPACE.all_modes()
+    for _ in range(40):
+        iobs = _rand_infer_obs(rng, modes)
+        # train obs cover only part of the inference modes (the scalar loop
+        # skips uncovered modes; the batched mask must too)
+        imodes = list({pm for pm, _ in iobs})
+        tobs = {pm: (round(rng.uniform(0.01, 1.0), 3),
+                     round(rng.uniform(5.0, 60.0), 2))
+                for pm in rng.sample(imodes, max(1, len(imodes) // 2))}
+        probs = [P.ConcurrentProblem(rng.uniform(1, 70),
+                                     rng.choice([0.05, 0.5, 2.0]),
+                                     rng.choice([10.0, 30.0, 60.0]))
+                 for _ in range(15)]
+        batched = G.solve_concurrent_batch(probs, tobs, iobs)
+        scalar = [P.solve_concurrent(pr, tobs, iobs) for pr in probs]
+        assert batched == scalar
+
+
+def test_empty_observations_and_problems():
+    assert G.solve_train_batch([P.TrainProblem(30.0)], {}) == [None]
+    assert G.solve_infer_batch([], {}) == []
+    assert G.solve_concurrent_batch([P.ConcurrentProblem(30.0, 1.0, 60.0)],
+                                    {}, {}) == [None]
+
+
+def test_chunked_path_matches_unchunked():
+    """Force multi-chunk execution and compare against one-shot solving."""
+    pytest.importorskip("jax")
+    rng = random.Random(10)
+    modes = SPACE.all_modes()
+    obs = {pm: (rng.uniform(0.01, 1.0), rng.uniform(5.0, 60.0))
+           for pm in modes}
+    probs = [P.TrainProblem(rng.uniform(1, 70)) for _ in range(64)]
+    old = G.CHUNK_ELEMS
+    try:
+        G.CHUNK_ELEMS = len(modes) * 4       # ~16 problems per chunk
+        chunked = G.solve_train_batch(probs, obs, backend="jax")
+    finally:
+        G.CHUNK_ELEMS = old
+    assert chunked == G.solve_train_batch(probs, obs)
+
+
+# ---------------------------------------------------------------------------
+# oracle: vectorized path on the dense 441 x 5 sweep == scalar reference
+# ---------------------------------------------------------------------------
+
+def test_oracle_batch_matches_scalar_on_dense_grid():
+    oracle = Oracle(DEV, SPACE)
+    w_tr = TRAIN_WORKLOADS["mobilenet"]
+    w_in = INFER_WORKLOADS["mobilenet"]
+    tobs = oracle.train_observations(w_tr)
+    iobs = oracle.infer_observations(w_in)
+    assert len(tobs) == 441 and len(iobs) == 441 * 5
+
+    tprobs = [P.TrainProblem(float(b)) for b in range(8, 61, 4)]
+    assert oracle.solve_train_batch(w_tr, tprobs) == \
+        [P.solve_train(pr, tobs) for pr in tprobs]
+
+    iprobs = [P.InferProblem(float(b), lat, rate)
+              for b in (12, 25, 40, 55) for lat in (0.05, 0.3, 1.0)
+              for rate in (30.0, 60.0, 90.0)]
+    assert oracle.solve_infer_batch(w_in, iprobs) == \
+        [P.solve_infer(pr, iobs) for pr in iprobs]
+
+    cprobs = [P.ConcurrentProblem(float(b), lat, rate)
+              for b in (15, 30, 45) for lat in (0.5, 1.0, 2.0)
+              for rate in (30.0, 60.0, 120.0)]
+    assert oracle.solve_concurrent_batch(w_tr, w_in, cprobs) == \
+        [P.solve_concurrent(pr, tobs, iobs) for pr in cprobs]
+
+
+def test_oracle_true_lookups_match_device():
+    oracle = Oracle(DEV, SPACE)
+    w = INFER_WORKLOADS["resnet50"]
+    pm = SPACE.midpoint()
+    assert oracle.true_infer(w, pm, 16) == DEV.time_power(w, pm, 16)
+    w_tr = TRAIN_WORKLOADS["yolov8n"]
+    assert oracle.true_train(w_tr, pm) == DEV.time_power(w_tr, pm)
+    # off-grid fallback goes straight to the device model
+    off = pm.replace(cpuf=123)
+    assert oracle.true_train(w_tr, off) == DEV.time_power(w_tr, off)
+
+
+# ---------------------------------------------------------------------------
+# jax backend: jit+vmap reduction agrees with the NumPy reference
+# ---------------------------------------------------------------------------
+
+def test_jax_backend_matches_numpy():
+    pytest.importorskip("jax")
+    oracle = Oracle(DEV, SPACE)
+    w_tr = TRAIN_WORKLOADS["resnet18"]
+    w_in = INFER_WORKLOADS["lstm"]
+    tprobs = [P.TrainProblem(float(b)) for b in range(10, 55, 9)]
+    iprobs = [P.InferProblem(float(b), 0.3, 60.0) for b in range(10, 55, 9)]
+    cprobs = [P.ConcurrentProblem(float(b), 1.0, 60.0)
+              for b in range(10, 55, 9)]
+    assert oracle.solve_train_batch(w_tr, tprobs, backend="jax") == \
+        oracle.solve_train_batch(w_tr, tprobs)
+    assert oracle.solve_infer_batch(w_in, iprobs, backend="jax") == \
+        oracle.solve_infer_batch(w_in, iprobs)
+    assert oracle.solve_concurrent_batch(w_tr, w_in, cprobs, backend="jax") \
+        == oracle.solve_concurrent_batch(w_tr, w_in, cprobs)
+
+
+# ---------------------------------------------------------------------------
+# fitted strategies: batch answering == per-problem answering
+# ---------------------------------------------------------------------------
+
+def test_rnd_solve_batch_matches_scalar_solve():
+    from repro.core.baselines import RNDInfer, RNDTrain
+    from repro.core.device_model import Profiler
+    w = TRAIN_WORKLOADS["lstm"]
+    strat = RNDTrain(Profiler(DEV, w), 50, SPACE)
+    probs = [P.TrainProblem(float(b)) for b in range(10, 55, 5)]
+    assert strat.solve_batch(probs) == [strat.solve(pr) for pr in probs]
+
+    wi = INFER_WORKLOADS["mobilenet"]
+    istrat = RNDInfer(Profiler(DEV, wi), 150, SPACE)
+    iprobs = [P.InferProblem(float(b), 0.4, 60.0) for b in range(10, 55, 5)]
+    assert istrat.solve_batch(iprobs) == [istrat.solve(pr) for pr in iprobs]
+
+
+# ---------------------------------------------------------------------------
+# pareto: vectorized front/front_lookup == scalar reference semantics
+# ---------------------------------------------------------------------------
+
+def _ref_pareto_front(points, lower_is_better=True):
+    sign = 1.0 if lower_is_better else -1.0
+    items = sorted(points.items(), key=lambda kv: (kv[1][0], sign * kv[1][1]))
+    front, best = {}, float("inf")
+    for key, (p, obj) in items:
+        o = sign * obj
+        if o < best:
+            front[key] = (p, obj)
+            best = o
+    return front
+
+
+def _ref_front_lookup(front, power_budget, lower_is_better=True):
+    sign = 1.0 if lower_is_better else -1.0
+    best = None
+    for key, (p, obj) in front.items():
+        if p <= power_budget and (best is None or sign * obj < sign * best[1][1]):
+            best = (key, (p, obj))
+    return best
+
+
+@pytest.mark.parametrize("lower", [True, False])
+def test_pareto_matches_reference_randomized(lower):
+    rng = random.Random(11)
+    for _ in range(50):
+        n = rng.randrange(1, 40)
+        points = {i: (rng.choice([1.0, 5.0, round(rng.uniform(0.0, 50.0), 2)]),
+                      rng.choice([2.0, round(rng.uniform(0.001, 10.0), 3)]))
+                  for i in range(n)}
+        front = pareto_front(points, lower)
+        ref = _ref_pareto_front(points, lower)
+        assert front == ref and list(front) == list(ref)
+        for budget in (0.0, 2.0, rng.uniform(0, 55)):
+            assert front_lookup(front, budget, lower) == \
+                _ref_front_lookup(front, budget, lower)
+    assert pareto_front({}) == {}
+    assert front_lookup({}, 10.0) is None

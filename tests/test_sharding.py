@@ -12,9 +12,14 @@ from repro.models import sharding as S
 from repro.models.model import init_cache, init_params
 
 
+def _abstract_mesh(sizes, names):
+    """jax >= 0.4.36 takes a single ((name, size), ...) shape tuple."""
+    return AbstractMesh(tuple(zip(names, sizes)))
+
+
 def _meshes():
-    return [AbstractMesh((16, 16), ("data", "model")),
-            AbstractMesh((2, 16, 16), ("pod", "data", "model"))]
+    return [_abstract_mesh((16, 16), ("data", "model")),
+            _abstract_mesh((2, 16, 16), ("pod", "data", "model"))]
 
 
 def _axis_size(mesh, axes):
@@ -70,7 +75,7 @@ def test_expert_sharding_strategy(arch):
     """Arctic (128e) must be expert-parallel on the model axis; Mixtral (8e)
     must fall back to per-expert FFN tensor parallelism."""
     cfg = get_config(arch)
-    mesh = AbstractMesh((16, 16), ("data", "model"))
+    mesh = _abstract_mesh((16, 16), ("data", "model"))
     specs = S.param_specs(cfg, mesh)
     w1_spec = specs["layers"]["moe"]["w1"]
     if cfg.n_experts % 16 == 0:
@@ -87,9 +92,9 @@ def test_vocab_padding_is_model_shardable():
 
 
 def test_batch_axes_fallback_for_batch_1():
-    mesh = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+    mesh = _abstract_mesh((2, 16, 16), ("pod", "data", "model"))
     assert S.batch_axes(mesh, 1) is None            # long_500k: replicate
     assert S.batch_axes(mesh, 128) == ("pod", "data")
     assert S.batch_axes(mesh, 32) == ("pod", "data")
-    mesh1 = AbstractMesh((16, 16), ("data", "model"))
+    mesh1 = _abstract_mesh((16, 16), ("data", "model"))
     assert S.batch_axes(mesh1, 256) == ("data",)
