@@ -2,23 +2,26 @@
 vs optimal, per strategy, over the paper's 5 {train, infer} DNN pairs.
 
 Oracle optima and fitted-strategy answers for the whole sweep come from one
-batched reduction each (core.grid_eval); GMD profiles per problem."""
+batched reduction each (core.grid_eval); strategies resolve through the
+Fulcrum scenario registry (GMD re-profiles per problem, fitted models are
+built once per pair). The GMD plan for the median solvable problem is also
+*executed* with the trace-driven engine as an end-to-end check."""
 from __future__ import annotations
 
 from repro.core import problem as P
-from repro.core.als import ALSConcurrent, QuadrantRanges
-from repro.core.baselines import NNConcurrentBaseline, RNDConcurrent
-from repro.core.device_model import INFER_WORKLOADS, Profiler, TRAIN_WORKLOADS
-from repro.core.gmd import ConcurrentProfiler, GMDConcurrent
+from repro.core.als import QuadrantRanges
+from repro.core.device_model import INFER_WORKLOADS, TRAIN_WORKLOADS
+from repro.core.scheduler import Fulcrum, Scenario
 
-from benchmarks.common import BACKEND, DEV, ORACLE, SPACE, loss_pct, \
-    median, row, concurrent_problem_grid
+from benchmarks.common import BACKEND, DEV, ORACLE, SPACE, \
+    gmd_executed_row, loss_pct, median, row, concurrent_problem_grid
 
 # {train, infer} pairs from §7.3
 PAIRS = [("yolov8n", "resnet50"), ("resnet18", "mobilenet"),
          ("mobilenet", "mobilenet"), ("resnet18", "bert"),
          ("mobilenet", "lstm")]
 NN_EPOCHS = 300
+STRATEGIES = ("gmd15", "als145", "rnd150", "rnd250", "nn250")
 
 
 def _quadrants(bert: bool) -> QuadrantRanges:
@@ -27,35 +30,26 @@ def _quadrants(bert: bool) -> QuadrantRanges:
     return QuadrantRanges(latency=(0.5, 2.0), arrival=(30.0, 120.0))
 
 
-def _cp(w_tr, w_in) -> ConcurrentProfiler:
-    return ConcurrentProfiler(Profiler(DEV, w_tr), Profiler(DEV, w_in))
-
-
 def run(full: bool = False, pairs=None) -> list[str]:
     rows = []
     for tr_name, in_name in (pairs or PAIRS):
         w_tr, w_in = TRAIN_WORKLOADS[tr_name], INFER_WORKLOADS[in_name]
         bert = in_name == "bert"
+        f = Fulcrum(DEV, SPACE, _quadrants(bert), nn_epochs=NN_EPOCHS)
         probs = concurrent_problem_grid(full, bert=bert)
         opts = ORACLE.solve_concurrent_batch(w_tr, w_in, probs, backend=BACKEND)
         solvable_pairs = [(prob, opt) for prob, opt in zip(probs, opts)
                           if opt is not None and opt.throughput > 0]
         solvable = len(solvable_pairs)
-        fitted = {
-            "als145": ALSConcurrent(_cp(w_tr, w_in), _quadrants(bert), SPACE,
-                                    nn_epochs=NN_EPOCHS),
-            "rnd150": RNDConcurrent(_cp(w_tr, w_in), 150, SPACE),
-            "rnd250": RNDConcurrent(_cp(w_tr, w_in), 250, SPACE),
-            "nn250": NNConcurrentBaseline(_cp(w_tr, w_in), 250, SPACE,
-                                          nn_epochs=NN_EPOCHS),
-        }
-        strategies = {"gmd15": None, **fitted}
-        for sname, strat in strategies.items():
+        gmd_plans = []
+        for sname in STRATEGIES:
             losses, viols, solved = [], 0, 0
             if sname == "gmd15":
-                sols = [GMDConcurrent(_cp(w_tr, w_in), SPACE).solve(prob)
-                        for prob, _ in solvable_pairs]
+                gmd_plans = [f.solve_concurrent(w_tr, w_in, prob, "gmd")
+                             for prob, _ in solvable_pairs]
+                sols = [pl.solution if pl else None for pl in gmd_plans]
             else:
+                strat = f.strategy_for(Scenario.CONCURRENT, sname, w_tr, w_in)
                 sols = strat.solve_batch([prob for prob, _ in solvable_pairs])
             for (prob, opt), sol in zip(solvable_pairs, sols):
                 if sol is None:
@@ -76,6 +70,11 @@ def run(full: bool = False, pairs=None) -> list[str]:
                 f"concurrent/{tr_name}+{in_name}/{sname}/median_tput_loss_pct",
                 median(losses),
                 f"solved_pct={pct:.1f};violations={viols};solvable={solvable}"))
+        erow = gmd_executed_row(f, solvable_pairs, gmd_plans, w_in, w_tr,
+                                f"concurrent/{tr_name}+{in_name}/gmd15",
+                                "tput")
+        if erow:
+            rows.append(erow)
     return rows
 
 

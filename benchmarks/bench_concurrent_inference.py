@@ -2,23 +2,25 @@
 throughput subject to the urgent inference's latency deadline and the power
 budget. Pairs {non-urgent, urgent}: {ResNet50, BERT} and {ResNet50, MNet}
 modeled as the concurrent problem with the non-urgent batch inference
-(fixed bs=32) playing the training role (§5.4). Oracle optima and fitted
-strategies answer the whole sweep via batched grid reductions."""
+(fixed bs=32) playing the training role (§5.4). Strategies resolve through
+the Fulcrum registry under Scenario.CONCURRENT_INFERENCE; oracle optima and
+fitted strategies answer the whole sweep via batched grid reductions, and
+the urgent stream's GMD plan is executed with the trace-driven engine."""
 from __future__ import annotations
 
 import dataclasses
 
 from repro.core import problem as P
-from repro.core.als import ALSConcurrent, QuadrantRanges
-from repro.core.baselines import NNConcurrentBaseline, RNDConcurrent
-from repro.core.device_model import INFER_WORKLOADS, Profiler
-from repro.core.gmd import ConcurrentProfiler, GMDConcurrent
+from repro.core.als import QuadrantRanges
+from repro.core.device_model import INFER_WORKLOADS
+from repro.core.scheduler import Fulcrum, Scenario
 
-from benchmarks.common import BACKEND, DEV, ORACLE, SPACE, loss_pct, \
-    median, row, concurrent_problem_grid
+from benchmarks.common import BACKEND, DEV, ORACLE, SPACE, \
+    gmd_executed_row, loss_pct, median, row, concurrent_problem_grid
 
 NN_EPOCHS = 300
 PAIRS = [("resnet50", "bert"), ("resnet50", "mobilenet")]
+STRATEGIES = ("gmd15", "als145", "rnd150", "rnd250", "nn250")
 
 
 def _nonurgent(name: str):
@@ -32,27 +34,25 @@ def run(full: bool = False) -> list[str]:
         w_nu = _nonurgent(nu_name)
         w_u = INFER_WORKLOADS[u_name]
         bert = u_name == "bert"
+        quad = (QuadrantRanges((2.0, 6.0), (1.0, 15.0)) if bert
+                else QuadrantRanges((0.5, 2.0), (30.0, 120.0)))
+        f = Fulcrum(DEV, SPACE, quad, nn_epochs=NN_EPOCHS)
         probs = concurrent_problem_grid(full, bert=bert)
         opts = ORACLE.solve_concurrent_batch(w_nu, w_u, probs, backend=BACKEND)
         solvable_pairs = [(prob, opt) for prob, opt in zip(probs, opts)
                           if opt is not None and opt.throughput > 0]
         solvable = len(solvable_pairs)
-        quad = (QuadrantRanges((2.0, 6.0), (1.0, 15.0)) if bert
-                else QuadrantRanges((0.5, 2.0), (30.0, 120.0)))
-        mk = lambda: ConcurrentProfiler(Profiler(DEV, w_nu), Profiler(DEV, w_u))
-        fitted = {
-            "als145": ALSConcurrent(mk(), quad, SPACE, nn_epochs=NN_EPOCHS),
-            "rnd150": RNDConcurrent(mk(), 150, SPACE),
-            "rnd250": RNDConcurrent(mk(), 250, SPACE),
-            "nn250": NNConcurrentBaseline(mk(), 250, SPACE, nn_epochs=NN_EPOCHS),
-        }
-        strategies = {"gmd15": None, **fitted}
-        for sname, strat in strategies.items():
+        gmd_plans = []
+        for sname in STRATEGIES:
             losses, solved = [], 0
             if sname == "gmd15":
-                sols = [GMDConcurrent(mk(), SPACE).solve(prob)
-                        for prob, _ in solvable_pairs]
+                gmd_plans = [f.solve_concurrent_inference(w_nu, w_u, prob,
+                                                          "gmd")
+                             for prob, _ in solvable_pairs]
+                sols = [pl.solution if pl else None for pl in gmd_plans]
             else:
+                strat = f.strategy_for(Scenario.CONCURRENT_INFERENCE, sname,
+                                       w_nu, w_u)
                 sols = strat.solve_batch([prob for prob, _ in solvable_pairs])
             for (prob, opt), sol in zip(solvable_pairs, sols):
                 if sol is None:
@@ -71,6 +71,11 @@ def run(full: bool = False) -> list[str]:
             rows.append(row(
                 f"concurrent_infer/{nu_name}+{u_name}/{sname}/median_tput_loss_pct",
                 median(losses), f"solved_pct={pct:.1f}"))
+        erow = gmd_executed_row(
+            f, solvable_pairs, gmd_plans, w_u, w_nu,
+            f"concurrent_infer/{nu_name}+{u_name}/gmd15", "nonurgent_tput")
+        if erow:
+            rows.append(erow)
     return rows
 
 

@@ -1,0 +1,88 @@
+"""Execution-engine microbenchmark: the vectorized trace-driven simulators
+(core.simulate) vs the seed's scalar per-request loops, over the *full*
+Fig. 2 interleaving sweep (10 GMD-planned configs x 3 approaches at 120 s).
+
+The managed outputs of both paths are asserted identical before timing (the
+engine's exactness contract); the speedup is printed as CSV rows and
+snapshotted to ``benchmarks/results/BENCH_interleave.json`` so it is tracked
+across PRs, mirroring bench_solver's BENCH_solver.json."""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+from repro.core import simulate as S
+
+from benchmarks.bench_interleaving import solve_configs
+from benchmarks.common import DEV, row
+
+SNAPSHOT = Path(__file__).parent / "results" / "BENCH_interleave.json"
+
+SCALAR = {"managed": S.managed_scalar,
+          "native": lambda *a: S.native_scalar(*a, seed=0),
+          "streams": lambda *a: S.streams_scalar(*a, seed=0)}
+VECTOR = {"managed": lambda *a: S.simulate(*a, approach="managed"),
+          "native": lambda *a: S.simulate(*a, approach="native", seed=0),
+          "streams": lambda *a: S.simulate(*a, approach="streams", seed=0)}
+
+
+def _time(sims, repeats: int) -> float:
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        for fn, args in sims:
+            fn(*args)
+    return (time.perf_counter() - t0) / repeats
+
+
+def run(full: bool = False) -> list[str]:
+    # always measure the full Fig. 2 sweep: the point is paper-scale traces
+    w_tr, w_in, configs = solve_configs(duration=120.0)
+    solved = [(prob, plan, trace) for _, prob, plan, trace in configs
+              if plan is not None]
+
+    # exactness gate: vectorized managed == scalar reference on every config
+    for prob, plan, trace in solved:
+        a = S.simulate(DEV, w_tr, w_in, plan.pm, plan.bs, trace, "managed")
+        b = S.managed_scalar(DEV, w_tr, w_in, plan.pm, plan.bs, trace)
+        assert a.latencies.tolist() == b.latencies, "managed engine diverged"
+        assert a.train_minibatches == b.train_minibatches
+        assert a.power == b.power
+
+    repeats = 3 if full else 1
+    results: dict = {"configs": len(solved), "duration_s": 120.0,
+                     "requests_total": sum(len(t) for _, _, t in solved),
+                     "approaches": {}}
+    rows: list[str] = []
+    total_scalar = total_vector = 0.0
+    for name in ("managed", "native", "streams"):
+        sims_s = [(SCALAR[name], (DEV, w_tr, w_in, p.pm, p.bs, t))
+                  for _, p, t in solved]
+        sims_v = [(VECTOR[name], (DEV, w_tr, w_in, p.pm, p.bs, t))
+                  for _, p, t in solved]
+        _time(sims_v, 1)                       # warm allocator / caches
+        scalar_s = _time(sims_s, repeats)
+        vector_s = _time(sims_v, repeats)
+        total_scalar += scalar_s
+        total_vector += vector_s
+        speedup = scalar_s / vector_s
+        results["approaches"][name] = {
+            "scalar_s": scalar_s, "vector_s": vector_s, "speedup": speedup}
+        rows.append(row(f"interleave_engine/{name}/speedup", speedup,
+                        f"scalar={scalar_s*1e3:.1f}ms;"
+                        f"vector={vector_s*1e3:.1f}ms;n={len(solved)}"))
+    results["scalar_s"] = total_scalar
+    results["vector_s"] = total_vector
+    results["speedup"] = total_scalar / total_vector
+    rows.append(row("interleave_engine/full_sweep/speedup",
+                    results["speedup"],
+                    f"requests={results['requests_total']};"
+                    f"configs={len(solved)}x3"))
+    SNAPSHOT.parent.mkdir(parents=True, exist_ok=True)
+    SNAPSHOT.write_text(json.dumps(results, indent=1))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

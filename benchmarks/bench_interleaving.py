@@ -1,12 +1,12 @@
 """Paper Fig. 2: native vs streams vs managed interleaving — inference
-latency distribution and training throughput over 10 problem configs."""
+latency distribution and training throughput over 10 problem configs,
+executed by the vectorized trace-driven engine (core.simulate)."""
 from __future__ import annotations
 
 from repro.core import problem as P
 from repro.core.device_model import INFER_WORKLOADS, Profiler, TRAIN_WORKLOADS
 from repro.core.gmd import ConcurrentProfiler, GMDConcurrent
-from repro.core.interleave import (simulate_managed, simulate_native,
-                                   simulate_streams)
+from repro.core.simulate import ArrivalTrace, simulate
 
 from benchmarks.common import DEV, SPACE, row
 
@@ -16,27 +16,36 @@ CONFIGS = [(40, 0.6, 22), (50, 0.8, 24), (60, 0.8, 26), (70, 1.0, 28),
            (120, 1.2, 38), (60, 0.6, 40)]   # (rate RPS, latency s, power W)
 
 
-def run(full: bool = False) -> list[str]:
+def solve_configs(duration: float):
+    """GMD plan + arrival trace per Fig. 2 config (shared with the engine
+    microbenchmark in bench_interleave_engine)."""
     w_tr = TRAIN_WORKLOADS["mobilenet"]
     w_in = INFER_WORKLOADS["mobilenet"]
-    rows = []
-    duration = 120.0 if full else 60.0
+    out = []
     for i, (rate, lat, power) in enumerate(CONFIGS, 1):
         prob = P.ConcurrentProblem(float(power), lat, float(rate))
         cp = ConcurrentProfiler(Profiler(DEV, w_tr), Profiler(DEV, w_in))
         plan = GMDConcurrent(cp, SPACE).solve(prob)
+        trace = ArrivalTrace.uniform(float(rate), duration)
+        out.append((i, prob, plan, trace))
+    return w_tr, w_in, out
+
+
+def run(full: bool = False) -> list[str]:
+    duration = 120.0 if full else 60.0
+    w_tr, w_in, configs = solve_configs(duration)
+    rows = []
+    for i, prob, plan, trace in configs:
         if plan is None:
             rows.append(row(f"interleave/cfg{i}/unsolved", 1))
             continue
-        pm, bs = plan.pm, plan.bs
-        for sim, name in ((simulate_managed, "managed"),
-                          (simulate_native, "native"),
-                          (simulate_streams, "streams")):
-            rep = sim(DEV, w_tr, w_in, pm, bs, float(rate), duration=duration)
+        for name in ("managed", "native", "streams"):
+            rep = simulate(DEV, w_tr, w_in, plan.pm, plan.bs, trace,
+                           approach=name)
             rows.append(row(
                 f"interleave/cfg{i}/{name}/q3_latency_ms",
                 rep.latency_quantile(0.75) * 1e3,
-                f"viol_pct={100*rep.violation_rate(lat):.1f};"
+                f"viol_pct={100*rep.violation_rate(prob.latency_budget):.1f};"
                 f"tput={rep.train_throughput:.2f}mb_s;"
                 f"median_ms={rep.latency_quantile(0.5)*1e3:.0f}"))
     return rows

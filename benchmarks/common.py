@@ -39,6 +39,23 @@ def row(name: str, value, derived: str = "") -> str:
     return f"{name},{value},{derived}"
 
 
+def gmd_executed_row(fulcrum, solvable_pairs, plans, w_serve, w_fill,
+                     prefix: str, tput_label: str) -> Optional[str]:
+    """Engine end-to-end check shared by the concurrent benches: execute the
+    median solvable problem's GMD plan with the trace-driven engine; the
+    realized latencies must respect the budget the plan was solved for."""
+    executed = [(prob, pl) for (prob, _), pl in zip(solvable_pairs, plans)
+                if pl is not None]
+    if not executed:
+        return None
+    prob, plan = executed[len(executed) // 2]
+    rep = fulcrum.execute(plan, w_serve, w_fill,
+                          arrival_rate=prob.arrival_rate, duration=30.0)
+    return row(f"{prefix}/executed_q3_ms", rep.latency_quantile(0.75) * 1e3,
+               f"viol_pct={100*rep.violation_rate(prob.latency_budget):.1f};"
+               f"{tput_label}={rep.train_throughput:.2f}mb_s")
+
+
 def train_problem_grid(full: bool, bert: bool = False):
     """Paper §7.1: power 10-50 W step 1 (10-60 for BERT)."""
     hi = 61 if bert else 51

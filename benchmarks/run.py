@@ -7,13 +7,13 @@ Default grids are strided for CPU wall-time; --full uses the paper's exact
 grids (273k+ problem configurations).
 """
 import argparse
-import sys
 import time
 
 from benchmarks import (bench_arch_fulcrum, bench_concurrent,
                         bench_concurrent_inference, bench_dynamic,
-                        bench_infer, bench_interleaving, bench_roofline,
-                        bench_solver, bench_table1, bench_train)
+                        bench_infer, bench_interleave_engine,
+                        bench_interleaving, bench_roofline, bench_solver,
+                        bench_table1, bench_train)
 
 SUITES = {
     "fig2_interleaving": bench_interleaving.run,
@@ -26,6 +26,7 @@ SUITES = {
     "arch_fulcrum": bench_arch_fulcrum.run,
     "roofline": bench_roofline.run,
     "solver_microbench": bench_solver.run,
+    "interleave_engine": bench_interleave_engine.run,
 }
 
 

@@ -1,15 +1,16 @@
 """Dynamic arrival rates (paper §5.4/§7.4): serve an inference workload whose
 request rate changes every window, replanning with GMD only when the current
-plan stops satisfying the new rate — profiled modes are reused across windows.
+plan stops satisfying the new rate — profiled modes are reused across
+windows. Each window is then *executed* by the trace-driven engine
+(core.simulate) over a uniform or seeded-Poisson arrival trace.
 
 Run: PYTHONPATH=src:. python examples/dynamic_serving.py [--trace azure]
+     [--arrivals poisson] [--strategy rnd150]
 """
 import argparse
 
 from benchmarks.bench_dynamic import make_traces
-from repro.core import problem as P
 from repro.core.device_model import DeviceModel, INFER_WORKLOADS
-from repro.core.interleave import simulate_managed
 from repro.core.scheduler import Fulcrum
 
 POWER, LATENCY = 40.0, 0.1
@@ -17,28 +18,37 @@ POWER, LATENCY = 40.0, 0.1
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--trace", default="azure", choices=["azure", "alibaba", "poisson"])
+    ap.add_argument("--trace", default="azure",
+                    choices=["azure", "alibaba", "poisson"])
     ap.add_argument("--dnn", default="resnet50")
+    ap.add_argument("--strategy", default="gmd")
+    ap.add_argument("--arrivals", default="uniform",
+                    choices=["uniform", "poisson"])
     args = ap.parse_args()
 
     rates = make_traces()[args.trace]
     dev = DeviceModel()
     w = INFER_WORKLOADS[args.dnn]
     f = Fulcrum(dev)
-    sols = f.solve_dynamic(w, POWER, LATENCY, rates, strategy="gmd")
+    windows = f.serve_dynamic(w, POWER, LATENCY, rates,
+                              strategy=args.strategy, window_duration=30.0,
+                              arrivals=args.arrivals)
 
-    print(f"{args.dnn} on {args.trace} trace: {len(rates)} x 5-min windows, "
+    print(f"{args.dnn} on {args.trace} trace ({args.arrivals} arrivals, "
+          f"{args.strategy}): {len(rates)} x 5-min windows, "
           f"power<={POWER:.0f} W, latency<={LATENCY*1e3:.0f} ms")
-    print(f"{'win':>3} {'rate':>6} {'pm':>18} {'bs':>3} {'lat_ms':>7} {'pow_W':>6}")
+    print(f"{'win':>3} {'rate':>6} {'pm':>18} {'bs':>3} {'p95_ms':>7} "
+          f"{'viol%':>5} {'pow_W':>6}")
     found = 0
-    for i, (rate, sol) in enumerate(zip(rates, sols)):
-        if sol is None:
-            print(f"{i:3d} {rate:6.1f} {'(no solution)':>18}")
+    for i, wr in enumerate(windows):
+        if wr.solution is None:
+            print(f"{i:3d} {wr.rate:6.1f} {'(no solution)':>18}")
             continue
         found += 1
-        rep = simulate_managed(dev, None, w, sol.pm, sol.bs, rate, duration=30.0)
-        print(f"{i:3d} {rate:6.1f} {str(sol.pm):>18} {sol.bs:3d} "
-              f"{rep.latency_quantile(0.95)*1e3:7.1f} {sol.power:6.1f}")
+        sol, rep = wr.solution, wr.report
+        print(f"{i:3d} {wr.rate:6.1f} {str(sol.pm):>18} {sol.bs:3d} "
+              f"{rep.latency_quantile(0.95)*1e3:7.1f} "
+              f"{100*rep.violation_rate(LATENCY):5.1f} {sol.power:6.1f}")
     print(f"solutions found: {found}/{len(rates)}")
 
 

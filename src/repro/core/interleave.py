@@ -1,6 +1,6 @@
 """Execution approaches for concurrent training + inference (paper §3, Fig 2).
 
-Event-driven simulators over the device model:
+Thin wrappers over the vectorized trace-driven engine in ``core.simulate``:
  * managed   — Fulcrum's approach: explicit alternation at minibatch
    granularity; a training minibatch is launched only if it finishes before
    the next inference batch is ready, so inference never queues behind
@@ -12,46 +12,18 @@ Event-driven simulators over the device model:
    non-deterministic resource blocking still inflates tail latency.
 
 All three obey the measured interleaving laws: t_interleaved = sum(t_i) and
-p = max(p_i). Randomness is deterministic per seed.
+p = max(p_i). Randomness is deterministic per seed. These wrappers keep the
+seed's fixed-rate signature; call ``core.simulate.simulate`` directly to
+execute over Poisson or piecewise-rate ``ArrivalTrace``s.
 """
 from __future__ import annotations
 
-import dataclasses
-import random
 from typing import Optional
 
-from repro.core.device_model import DeviceModel, Profiler, WorkloadProfile
+from repro.core.device_model import DeviceModel, WorkloadProfile
 from repro.core.powermode import PowerMode
-
-
-@dataclasses.dataclass
-class ExecutionReport:
-    approach: str
-    latencies: list[float]            # per-request latency (s), queue + exec
-    train_minibatches: int
-    duration: float
-    power: float
-
-    @property
-    def train_throughput(self) -> float:
-        return self.train_minibatches / self.duration
-
-    def latency_quantile(self, q: float) -> float:
-        if not self.latencies:
-            return 0.0
-        xs = sorted(self.latencies)
-        i = min(len(xs) - 1, int(q * len(xs)))
-        return xs[i]
-
-    def violation_rate(self, latency_budget: float) -> float:
-        if not self.latencies:
-            return 0.0
-        return sum(1 for x in self.latencies if x > latency_budget) / len(self.latencies)
-
-
-def _arrivals(arrival_rate: float, duration: float) -> list[float]:
-    n = int(arrival_rate * duration)
-    return [i / arrival_rate for i in range(n)]
+from repro.core.simulate import (ArrivalTrace, ExecutionReport,  # noqa: F401
+                                 simulate)
 
 
 def simulate_managed(device: DeviceModel, w_tr: Optional[WorkloadProfile],
@@ -59,25 +31,9 @@ def simulate_managed(device: DeviceModel, w_tr: Optional[WorkloadProfile],
                      arrival_rate: float, duration: float = 120.0) -> ExecutionReport:
     """Fulcrum managed interleaving: one DNN at a time, switched at minibatch
     boundaries; training fills slack conservatively."""
-    t_in, p_in = device.time_power(w_in, pm, bs)
-    t_tr, p_tr = device.time_power(w_tr, pm) if w_tr else (float("inf"), 0.0)
-    arrivals = _arrivals(arrival_rate, duration)
-    latencies: list[float] = []
-    now = 0.0
-    trained = 0
-    i = 0
-    while i + bs <= len(arrivals):
-        batch_ready = arrivals[i + bs - 1]       # bs-th request queued
-        # fill slack with integral training minibatches that finish in time
-        while w_tr and now + t_tr <= batch_ready:
-            now += t_tr
-            trained += 1
-        now = max(now, batch_ready)
-        now += t_in                              # run the inference minibatch
-        latencies.extend(now - arrivals[j] for j in range(i, i + bs))
-        i += bs
-    power = max(p_in, p_tr if trained else 0.0)
-    return ExecutionReport("managed", latencies, trained, duration, power)
+    return simulate(device, w_tr, w_in, pm, bs,
+                    ArrivalTrace.uniform(arrival_rate, duration),
+                    approach="managed")
 
 
 def simulate_native(device: DeviceModel, w_tr: WorkloadProfile,
@@ -86,27 +42,9 @@ def simulate_native(device: DeviceModel, w_tr: WorkloadProfile,
                     seed: int = 0) -> ExecutionReport:
     """Native kernel-level time-sharing: both processes always runnable;
     inference kernels contend with training kernels (~2x slowdown +- jitter)."""
-    rng = random.Random(seed)
-    t_in, p_in = device.time_power(w_in, pm, bs)
-    t_tr, p_tr = device.time_power(w_tr, pm)
-    arrivals = _arrivals(arrival_rate, duration)
-    latencies: list[float] = []
-    now = 0.0
-    i = 0
-    infer_busy = 0.0
-    while i + bs <= len(arrivals):
-        batch_ready = arrivals[i + bs - 1]
-        now = max(now, batch_ready)
-        slowdown = 1.0 + rng.uniform(0.5, 1.6)    # contention w/ training
-        exec_t = t_in * slowdown
-        now += exec_t
-        infer_busy += exec_t
-        latencies.extend(now - arrivals[j] for j in range(i, i + bs))
-        i += bs
-    # training gets the remaining GPU share, also degraded by switching
-    train_share = max(0.0, duration - infer_busy) * rng.uniform(0.85, 0.95)
-    trained = int(train_share / t_tr)
-    return ExecutionReport("native", latencies, trained, duration, max(p_in, p_tr))
+    return simulate(device, w_tr, w_in, pm, bs,
+                    ArrivalTrace.uniform(arrival_rate, duration),
+                    approach="native", seed=seed)
 
 
 def simulate_streams(device: DeviceModel, w_tr: WorkloadProfile,
@@ -115,23 +53,6 @@ def simulate_streams(device: DeviceModel, w_tr: WorkloadProfile,
                      seed: int = 0) -> ExecutionReport:
     """CUDA-streams space sharing, inference on the high-priority stream:
     throughput-friendly, but block-level resource blocking adds tail jitter."""
-    rng = random.Random(seed)
-    t_in, p_in = device.time_power(w_in, pm, bs)
-    t_tr, p_tr = device.time_power(w_tr, pm)
-    arrivals = _arrivals(arrival_rate, duration)
-    latencies: list[float] = []
-    now = 0.0
-    i = 0
-    while i + bs <= len(arrivals):
-        batch_ready = arrivals[i + bs - 1]
-        now = max(now, batch_ready)
-        slowdown = 1.0 + rng.uniform(0.05, 0.45)
-        if rng.random() < 0.18:                   # non-deterministic blocking
-            slowdown += rng.uniform(0.5, 2.0) * t_tr / max(t_in, 1e-6)
-        now += t_in * slowdown
-        latencies.extend(now - arrivals[j] for j in range(i, i + bs))
-        i += bs
-    # training stream runs concurrently at reduced efficiency
-    trained = int(duration * rng.uniform(0.75, 0.9) / t_tr)
-    return ExecutionReport("streams", latencies, trained, duration,
-                           max(p_in, p_tr) * 1.03)
+    return simulate(device, w_tr, w_in, pm, bs,
+                    ArrivalTrace.uniform(arrival_rate, duration),
+                    approach="streams", seed=seed)

@@ -1,16 +1,23 @@
 """Fulcrum: the top-level scheduler (paper Fig. 5).
 
-Given a workload (train / infer / concurrent pair / concurrent-inference
-pair), a problem configuration, and a strategy name, Fulcrum profiles via the
-chosen strategy, commits to a (power mode, beta_in, tau_tr) plan, and executes
-it with managed interleaving. Also supports dynamic arrival rates (§5.4):
-profiled modes are reused; GMD only backtracks to a different bs when the new
-rate invalidates the current plan.
+Given a workload tuple, a problem configuration, and a strategy name, Fulcrum
+profiles via the chosen strategy, commits to a (power mode [, beta_in
+[, tau_tr]]) plan, and executes it with the trace-driven engine
+(``core.simulate``). One strategy registry keyed on ``(Scenario, name)``
+replaces the per-scenario factory dicts: every scenario — train / infer /
+concurrent / concurrent-inference / dynamic — resolves its solver through the
+same table, with fitted strategies (ALS / RND / NN) cached for reuse and GMD
+always re-profiling (it is profiling). Dynamic arrival rates (§5.4) run
+through a re-planning controller: per-window solutions reuse the profiler
+cache (GMD) or the fitted model (everything else), and ``serve_dynamic``
+executes each window over its arrival trace, emitting per-window
+``ExecutionReport``s.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+import enum
+from typing import Callable, Optional, Sequence
 
 from repro.core import problem as P
 from repro.core.als import ALSConcurrent, ALSInfer, ALSTrain, QuadrantRanges
@@ -19,10 +26,120 @@ from repro.core.baselines import (NNConcurrentBaseline, NNInferBaseline,
                                   RNDTrain)
 from repro.core.device_model import DeviceModel, Profiler, WorkloadProfile
 from repro.core.gmd import ConcurrentProfiler, GMDConcurrent, GMDInfer, GMDTrain
-from repro.core.interleave import ExecutionReport, simulate_managed
+from repro.core.interleave import ExecutionReport
 from repro.core.oracle import Oracle
 from repro.core.powermode import PowerModeSpace
+from repro.core.simulate import ArrivalTrace, simulate
 
+
+class Scenario(enum.Enum):
+    TRAIN = "train"
+    INFER = "infer"
+    CONCURRENT = "concurrent"
+    CONCURRENT_INFERENCE = "concurrent_inference"
+    DYNAMIC = "dynamic"
+
+    @property
+    def canonical(self) -> "Scenario":
+        """The solver family a scenario maps onto: concurrent inference is
+        the concurrent problem with the non-urgent inference in the training
+        role, dynamic is per-window inference (§5.4)."""
+        return _CANONICAL.get(self, self)
+
+
+_CANONICAL = {Scenario.CONCURRENT_INFERENCE: Scenario.CONCURRENT,
+              Scenario.DYNAMIC: Scenario.INFER}
+
+
+def as_nonurgent(w: WorkloadProfile, bs: int = 32) -> WorkloadProfile:
+    """Cast an inference workload into the training role of the concurrent
+    problem: a non-urgent batch inference at a fixed minibatch size (§5.4)."""
+    if w.name.endswith("-nonurgent"):
+        return w
+    return dataclasses.replace(w, name=f"{w.name}-nonurgent", train_bs=bs)
+
+
+# ---------------------------------------------------------------------------
+# strategy registry: one table for every (scenario, strategy) pair
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class StrategySpec:
+    factory: Callable                 # (fulcrum, *workloads) -> strategy
+    cached: bool = True               # fitted models are reusable; GMD is not
+
+
+_REGISTRY: dict[tuple[Scenario, str], StrategySpec] = {}
+
+
+def register_strategy(scenario: Scenario, name: str, factory: Callable,
+                      cached: bool = True) -> None:
+    _REGISTRY[(scenario, name)] = StrategySpec(factory, cached)
+
+
+def available_strategies(scenario: Scenario) -> list[str]:
+    canon = scenario.canonical
+    return sorted(name for (sc, name) in _REGISTRY if sc is canon)
+
+
+def _prof(f: "Fulcrum", w: WorkloadProfile) -> Profiler:
+    return Profiler(f.device, w)
+
+
+def _cprof(f: "Fulcrum", w_tr: WorkloadProfile,
+           w_in: WorkloadProfile) -> ConcurrentProfiler:
+    return ConcurrentProfiler(Profiler(f.device, w_tr),
+                              Profiler(f.device, w_in))
+
+
+register_strategy(Scenario.TRAIN, "gmd",
+                  lambda f, w: GMDTrain(_prof(f, w), f.space), cached=False)
+register_strategy(Scenario.TRAIN, "als50",
+                  lambda f, w: ALSTrain(_prof(f, w), f.space,
+                                        nn_epochs=f.nn_epochs))
+register_strategy(Scenario.TRAIN, "rnd50",
+                  lambda f, w: RNDTrain(_prof(f, w), 50, f.space))
+register_strategy(Scenario.TRAIN, "rnd250",
+                  lambda f, w: RNDTrain(_prof(f, w), 250, f.space))
+register_strategy(Scenario.TRAIN, "nn250",
+                  lambda f, w: NNTrainBaseline(_prof(f, w), 250, f.space,
+                                               nn_epochs=f.nn_epochs))
+
+register_strategy(Scenario.INFER, "gmd",
+                  lambda f, w: GMDInfer(_prof(f, w), f.space), cached=False)
+register_strategy(Scenario.INFER, "als145",
+                  lambda f, w: ALSInfer(_prof(f, w), f.quadrants, f.space,
+                                        nn_epochs=f.nn_epochs))
+register_strategy(Scenario.INFER, "rnd150",
+                  lambda f, w: RNDInfer(_prof(f, w), 150, f.space))
+register_strategy(Scenario.INFER, "rnd250",
+                  lambda f, w: RNDInfer(_prof(f, w), 250, f.space))
+register_strategy(Scenario.INFER, "nn250",
+                  lambda f, w: NNInferBaseline(_prof(f, w), 250, f.space,
+                                               nn_epochs=f.nn_epochs))
+
+register_strategy(Scenario.CONCURRENT, "gmd",
+                  lambda f, w_tr, w_in: GMDConcurrent(_cprof(f, w_tr, w_in),
+                                                      f.space), cached=False)
+register_strategy(Scenario.CONCURRENT, "als145",
+                  lambda f, w_tr, w_in: ALSConcurrent(
+                      _cprof(f, w_tr, w_in), f.quadrants, f.space,
+                      nn_epochs=f.nn_epochs))
+register_strategy(Scenario.CONCURRENT, "rnd150",
+                  lambda f, w_tr, w_in: RNDConcurrent(_cprof(f, w_tr, w_in),
+                                                      150, f.space))
+register_strategy(Scenario.CONCURRENT, "rnd250",
+                  lambda f, w_tr, w_in: RNDConcurrent(_cprof(f, w_tr, w_in),
+                                                      250, f.space))
+register_strategy(Scenario.CONCURRENT, "nn250",
+                  lambda f, w_tr, w_in: NNConcurrentBaseline(
+                      _cprof(f, w_tr, w_in), 250, f.space,
+                      nn_epochs=f.nn_epochs))
+
+
+# ---------------------------------------------------------------------------
+# plans and per-window results
+# ---------------------------------------------------------------------------
 
 @dataclasses.dataclass
 class Plan:
@@ -30,6 +147,16 @@ class Plan:
     strategy: str
     profiling_runs: int
     profiling_cost_s: float
+    scenario: Optional[Scenario] = None
+
+
+@dataclasses.dataclass
+class WindowReport:
+    """One §5.4 rate window: the rate, the (re)planned solution, and the
+    engine's execution report over that window's arrival trace."""
+    rate: float
+    solution: Optional[P.Solution]
+    report: Optional[ExecutionReport]
 
 
 class Fulcrum:
@@ -45,117 +172,139 @@ class Fulcrum:
         self.oracle = Oracle(self.device, self.space)
         self._fitted: dict = {}     # reusable fitted strategies (ALS/RND/NN)
 
-    # -- strategy factories -------------------------------------------------
-    def _train_strategy(self, name: str, w: WorkloadProfile):
-        key = (name, w.name)
-        if name == "gmd":
-            return GMDTrain(Profiler(self.device, w), self.space)
-        if key not in self._fitted:
-            prof = Profiler(self.device, w)
-            self._fitted[key] = {
-                "als50": ALSTrain(prof, self.space, nn_epochs=self.nn_epochs),
-                "rnd50": RNDTrain(prof, 50, self.space),
-                "rnd250": RNDTrain(prof, 250, self.space),
-                "nn250": NNTrainBaseline(prof, 250, self.space,
-                                         nn_epochs=self.nn_epochs),
-            }[name]
-        return self._fitted[key]
-
-    def _infer_strategy(self, name: str, w: WorkloadProfile):
-        key = (name, w.name)
-        if name == "gmd":
-            return GMDInfer(Profiler(self.device, w), self.space)
-        if key not in self._fitted:
-            prof = Profiler(self.device, w)
-            self._fitted[key] = {
-                "als145": ALSInfer(prof, self.quadrants, self.space,
-                                   nn_epochs=self.nn_epochs),
-                "rnd150": RNDInfer(prof, 150, self.space),
-                "rnd250": RNDInfer(prof, 250, self.space),
-                "nn250": NNInferBaseline(prof, 250, self.space,
-                                         nn_epochs=self.nn_epochs),
-            }[name]
-        return self._fitted[key]
-
-    def _concurrent_strategy(self, name: str, w_tr, w_in):
-        key = (name, w_tr.name, w_in.name)
-        if name == "gmd":
-            cp = ConcurrentProfiler(Profiler(self.device, w_tr),
-                                    Profiler(self.device, w_in))
-            return GMDConcurrent(cp, self.space)
-        if key not in self._fitted:
-            cp = ConcurrentProfiler(Profiler(self.device, w_tr),
-                                    Profiler(self.device, w_in))
-            self._fitted[key] = {
-                "als145": ALSConcurrent(cp, self.quadrants, self.space,
-                                        nn_epochs=self.nn_epochs),
-                "rnd150": RNDConcurrent(cp, 150, self.space),
-                "rnd250": RNDConcurrent(cp, 250, self.space),
-                "nn250": NNConcurrentBaseline(cp, 250, self.space,
-                                              nn_epochs=self.nn_epochs),
-            }[name]
-        return self._fitted[key]
-
     # -- solve --------------------------------------------------------------
+    def solve(self, scenario, workloads: Sequence[WorkloadProfile], prob,
+              strategy: str = "gmd") -> Optional[Plan]:
+        scenario = Scenario(scenario)
+        s = self._strategy(scenario, strategy, *workloads)
+        return self._plan(s.solve(prob), s, strategy, scenario)
+
     def solve_train(self, w: WorkloadProfile, prob: P.TrainProblem,
                     strategy: str = "gmd") -> Optional[Plan]:
-        s = self._train_strategy(strategy, w)
-        sol = s.solve(prob)
-        return self._plan(sol, s, strategy)
+        return self.solve(Scenario.TRAIN, (w,), prob, strategy)
 
     def solve_infer(self, w: WorkloadProfile, prob: P.InferProblem,
                     strategy: str = "gmd") -> Optional[Plan]:
-        s = self._infer_strategy(strategy, w)
-        sol = s.solve(prob)
-        return self._plan(sol, s, strategy)
+        return self.solve(Scenario.INFER, (w,), prob, strategy)
 
     def solve_concurrent(self, w_tr: WorkloadProfile, w_in: WorkloadProfile,
                          prob: P.ConcurrentProblem,
                          strategy: str = "gmd") -> Optional[Plan]:
-        s = self._concurrent_strategy(strategy, w_tr, w_in)
-        sol = s.solve(prob)
-        return self._plan(sol, s, strategy)
+        return self.solve(Scenario.CONCURRENT, (w_tr, w_in), prob, strategy)
 
-    def _plan(self, sol, strat, name) -> Optional[Plan]:
+    def solve_concurrent_inference(self, w_nonurgent: WorkloadProfile,
+                                   w_urgent: WorkloadProfile,
+                                   prob: P.ConcurrentProblem,
+                                   strategy: str = "gmd",
+                                   nonurgent_bs: int = 32) -> Optional[Plan]:
+        """§5.4 concurrent inferences: maximize the non-urgent inference's
+        throughput under the urgent inference's latency deadline."""
+        return self.solve(Scenario.CONCURRENT_INFERENCE,
+                          (as_nonurgent(w_nonurgent, nonurgent_bs), w_urgent),
+                          prob, strategy)
+
+    def strategy_for(self, scenario, name: str, *workloads: WorkloadProfile):
+        """Resolve (scenario, strategy) through the registry; fitted
+        strategies are cached per workload tuple, GMD never is."""
+        return self._strategy(Scenario(scenario), name, *workloads)
+
+    def _strategy(self, scenario: Scenario, name: str,
+                  *workloads: WorkloadProfile):
+        if scenario is Scenario.CONCURRENT_INFERENCE:
+            # the scenario's defining cast (non-urgent inference in the
+            # training role, fixed bs), applied regardless of entry point
+            workloads = (as_nonurgent(workloads[0]),) + workloads[1:]
+        spec = _REGISTRY.get((scenario.canonical, name))
+        if spec is None:
+            raise KeyError(
+                f"no strategy {name!r} for scenario {scenario.value!r}; "
+                f"available: {available_strategies(scenario)}")
+        if not spec.cached:
+            return spec.factory(self, *workloads)
+        key = (scenario.canonical.value, name,
+               tuple(w.name for w in workloads))
+        if key not in self._fitted:
+            self._fitted[key] = spec.factory(self, *workloads)
+        return self._fitted[key]
+
+    def _plan(self, sol, strat, name, scenario=None) -> Optional[Plan]:
         if sol is None:
             return None
         prof = getattr(strat, "profiler", None) or getattr(strat, "cp", None)
         runs = prof.num_runs if prof is not None else 0
         cost = prof.profile_cost_s if prof is not None else 0.0
         return Plan(solution=sol, strategy=name, profiling_runs=runs,
-                    profiling_cost_s=cost)
+                    profiling_cost_s=cost, scenario=scenario)
 
-    # -- execute (managed interleaving over the device model) ---------------
+    # -- execute (trace-driven engine over the device model) ----------------
     def execute(self, plan: Plan, w_in: WorkloadProfile,
-                w_tr: Optional[WorkloadProfile], arrival_rate: float,
-                duration: float = 120.0) -> ExecutionReport:
+                w_tr: Optional[WorkloadProfile] = None,
+                arrival_rate: Optional[float] = None,
+                duration: float = 120.0,
+                trace: Optional[ArrivalTrace] = None,
+                approach: str = "managed", seed: int = 0) -> ExecutionReport:
+        """Execute a solved plan: the plan's power mode and minibatch size
+        drive the engine, managed slack-fill is capped at the committed
+        tau_tr, and the returned report carries the trace that was run."""
+        if trace is None:
+            if arrival_rate is None:
+                raise ValueError("execute() needs an arrival_rate or a trace")
+            trace = ArrivalTrace.uniform(arrival_rate, duration)
         sol = plan.solution
-        return simulate_managed(self.device, w_tr, w_in, sol.pm,
-                                sol.bs or 1, arrival_rate, duration)
+        if sol.bs is None:
+            raise ValueError(
+                f"plan ({plan.strategy}) has no inference minibatch size; "
+                "solve an infer/concurrent scenario before executing")
+        return simulate(self.device, w_tr, w_in, sol.pm, sol.bs, trace,
+                        approach=approach, seed=seed, tau_cap=sol.tau_tr)
 
-    # -- dynamic arrival rates (§5.4) ----------------------------------------
+    # -- dynamic arrival rates (§5.4): re-planning controller ----------------
     def solve_dynamic(self, w: WorkloadProfile, power_budget: float,
-                      latency_budget: float, rates: list[float],
+                      latency_budget: float, rates: Sequence[float],
                       strategy: str = "gmd") -> list[Optional[P.Solution]]:
-        """One solution per rate window, reusing profiling history: GMD keeps
-        its profiler cache and only re-searches/backtracks when the existing
-        observations stop satisfying the new rate."""
-        sols: list[Optional[P.Solution]] = []
+        """One solution per rate window, reusing planning state across
+        windows: GMD keeps its profiler cache and only re-searches/backtracks
+        when the existing observations stop satisfying the new rate; fitted
+        strategies (ALS/RND/NN) are fitted once and answer every window."""
+        probs = [P.InferProblem(power_budget, latency_budget, float(r))
+                 for r in rates]
         if strategy == "gmd":
             # one shared profiler: cached profiles are free, so every window
             # re-searches at full budget but mostly hits the cache; only
             # genuinely new (pm, bs) profiles count against max_tries (§5.4)
             prof = Profiler(self.device, w)
-            for rate in rates:
-                prob = P.InferProblem(power_budget, latency_budget, rate)
+            sols: list[Optional[P.Solution]] = []
+            for prob in probs:
                 sol = P.solve_infer(prob, prof.observed())
                 if sol is None:
                     GMDInfer(prof, self.space).solve(prob)
                     sol = P.solve_infer(prob, prof.observed())
                 sols.append(sol)
             return sols
-        for rate in rates:
-            prob = P.InferProblem(power_budget, latency_budget, rate)
-            plan = self.solve_infer(w, prob, strategy)
-            sols.append(plan.solution if plan else None)
-        return sols
+        strat = self._strategy(Scenario.DYNAMIC, strategy, w)
+        if hasattr(strat, "solve_batch"):
+            return list(strat.solve_batch(probs))
+        return [strat.solve(prob) for prob in probs]
+
+    def serve_dynamic(self, w: WorkloadProfile, power_budget: float,
+                      latency_budget: float, rates: Sequence[float],
+                      strategy: str = "gmd", window_duration: float = 30.0,
+                      arrivals: str = "uniform",
+                      seed: int = 0) -> list[WindowReport]:
+        """Solve and *execute* a dynamic trace: re-plan per rate window, then
+        run the engine over each window's arrival trace (uniform ticks or
+        seeded Poisson), emitting one ExecutionReport per window."""
+        sols = self.solve_dynamic(w, power_budget, latency_budget, rates,
+                                  strategy)
+        out: list[WindowReport] = []
+        for i, (rate, sol) in enumerate(zip(rates, sols)):
+            rep = None
+            if sol is not None:
+                trace = (ArrivalTrace.uniform(rate, window_duration)
+                         if arrivals == "uniform"
+                         else ArrivalTrace.poisson(rate, window_duration,
+                                                   seed + i))
+                rep = simulate(self.device, None, w, sol.pm, sol.bs, trace,
+                               approach="managed", seed=seed + i)
+            out.append(WindowReport(float(rate), sol, rep))
+        return out

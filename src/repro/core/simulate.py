@@ -1,0 +1,409 @@
+"""Vectorized trace-driven execution engine (paper §3 Fig. 2, §5.4).
+
+The seed simulators in ``core.interleave`` replayed every request in a Python
+loop; after PR 1 made the solvers batched, execution dominated benchmark wall
+time. This module replaces the per-request loops with NumPy array kernels
+over arrival-time vectors:
+
+ * ``ArrivalTrace`` — the workload input: a sorted vector of request arrival
+   timestamps. Constructors cover the paper's scenarios: ``uniform`` (the
+   seed's fixed-rate ticks), ``poisson`` (seeded stochastic arrivals), and
+   ``piecewise`` (per-window rates, the §5.4 dynamic traces produced by
+   ``bench_dynamic.make_traces``-style rate lists).
+ * ``simulate`` — one entry point dispatching to the managed / native /
+   streams kernels; ``core.interleave.simulate_*`` remain as thin wrappers.
+
+Exactness contract (mirrors ``core.grid_eval``): the managed path is
+*deterministic* and the vectorized kernel reproduces the scalar reference
+loop exactly — identical latency lists, training-minibatch counts, and power.
+The kernel exploits the loop's structure: training slack-fill never pushes
+``now`` past the batch-ready time, so completion times obey the max-plus
+recurrence ``c_k = fl(max(c_{k-1}, ready_k) + t_in)`` independent of
+training. The no-backlog candidate ``ready + t_in`` is vectorized; backlogged
+runs (rare under sustainable plans) are resolved with the exact scalar
+recurrence. Slack-fill counts come from a vectorized floor division, with an
+exact replay of the reference's repeated-addition loop on the (measure-zero)
+boundary cases where floating-point accumulation could flip the count —
+``tests/test_simulate.py`` enforces equality property-style.
+
+The native / streams paths are stochastic by design (contention jitter); they
+use seeded NumPy generators and a cumulative-sum service-time kernel
+(``c = max-accumulate(ready - cumsum_prev) + cumsum``), deterministic per
+seed but not bitwise-coupled to the seed's ``random.Random`` streams.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import random
+from typing import Callable, Optional, Sequence
+
+import numpy as np
+
+from repro.core.device_model import DeviceModel, WorkloadProfile
+from repro.core.powermode import PowerMode
+
+_EPS = float(np.finfo(np.float64).eps)
+
+# Exact slack-fill replay is O(count); past this the floor estimate stands
+# (its error bound is still astronomically below the decision boundary).
+_MAX_EXACT_FILL = 2_000_000
+
+
+# ---------------------------------------------------------------------------
+# arrival traces
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class ArrivalTrace:
+    """Sorted request-arrival timestamps (seconds) driving one simulation."""
+    times: np.ndarray
+    duration: float
+    kind: str = "uniform"
+
+    def __post_init__(self):
+        object.__setattr__(self, "times",
+                           np.ascontiguousarray(self.times, np.float64))
+
+    def __len__(self) -> int:
+        return int(self.times.size)
+
+    @property
+    def mean_rate(self) -> float:
+        return len(self) / self.duration if self.duration > 0 else 0.0
+
+    def shifted(self, t0: float) -> "ArrivalTrace":
+        return ArrivalTrace(self.times + t0, self.duration, self.kind)
+
+    @classmethod
+    def uniform(cls, rate: float, duration: float) -> "ArrivalTrace":
+        """Fixed-rate ticks at i/rate — bitwise identical to the seed's
+        ``[i / arrival_rate for i in range(int(rate * duration))]``."""
+        n = int(rate * duration)
+        return cls(np.arange(n, dtype=np.float64) / rate, float(duration))
+
+    @classmethod
+    def poisson(cls, rate: float, duration: float, seed: int = 0) -> "ArrivalTrace":
+        """Seeded Poisson process: exponential inter-arrival gaps."""
+        if rate <= 0.0:                       # idle window: no arrivals
+            return cls(np.empty(0), float(duration), "poisson")
+        rng = np.random.default_rng(seed)
+        mean = rate * duration
+        n = max(8, int(mean + 6.0 * math.sqrt(mean) + 8))
+        t = np.cumsum(rng.exponential(1.0 / rate, n))
+        while t.size and t[-1] < duration:        # undershoot: extend (rare)
+            t = np.concatenate([t, t[-1] + np.cumsum(
+                rng.exponential(1.0 / rate, n))])
+        return cls(t[t < duration], float(duration), "poisson")
+
+    @classmethod
+    def piecewise(cls, rates: Sequence[float], window_duration: float,
+                  seed: Optional[int] = None) -> "ArrivalTrace":
+        """Piecewise-rate trace: one window per rate (the §5.4 dynamic
+        scenario; ``bench_dynamic.make_traces`` emits such rate lists).
+        Uniform ticks within each window, Poisson when ``seed`` is given."""
+        parts, t0 = [], 0.0
+        for i, r in enumerate(rates):
+            if r > 0:
+                w = (cls.uniform(r, window_duration) if seed is None
+                     else cls.poisson(r, window_duration, seed + i))
+                parts.append(t0 + w.times)
+            t0 += window_duration
+        times = np.concatenate(parts) if parts else np.empty(0)
+        return cls(times, t0, "piecewise")
+
+
+# ---------------------------------------------------------------------------
+# execution report
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ExecutionReport:
+    approach: str
+    latencies: Sequence[float]        # per-request latency (s), queue + exec;
+    train_minibatches: int            # a list (scalar refs) or float64 array
+    duration: float
+    power: float
+    trace: Optional[ArrivalTrace] = None   # the arrivals that were executed
+
+    @property
+    def train_throughput(self) -> float:
+        return self.train_minibatches / self.duration
+
+    def latency_quantile(self, q: float) -> float:
+        """Nearest-rank quantile: the smallest sample with at least a q
+        fraction of the distribution at or below it (ceil(q*n)-th order
+        statistic), so q=0.75 over 4 samples is the 3rd, not the max."""
+        n = len(self.latencies)
+        if n == 0:
+            return 0.0
+        xs = np.sort(np.asarray(self.latencies, np.float64))
+        return float(xs[min(n - 1, max(0, math.ceil(q * n) - 1))])
+
+    def violation_rate(self, latency_budget: float) -> float:
+        n = len(self.latencies)
+        if n == 0:
+            return 0.0
+        xs = np.asarray(self.latencies, np.float64)
+        return float(np.count_nonzero(xs > latency_budget)) / n
+
+
+# ---------------------------------------------------------------------------
+# array kernels
+# ---------------------------------------------------------------------------
+
+def _batch_ready(times: np.ndarray, bs: int) -> np.ndarray:
+    """Arrival time of the bs-th request of each full minibatch; a trailing
+    partial batch never runs (as in the scalar loops)."""
+    return times[bs - 1::bs]
+
+
+def _managed_completions(ready: np.ndarray, t_in: float) -> np.ndarray:
+    """Exact batch completion times for c_k = fl(max(c_{k-1}, ready_k) + t_in):
+    the vectorized no-backlog candidate everywhere, with backlogged runs
+    (candidate finishing after the next batch is ready) replayed by the
+    scalar recurrence — identical float ops, so bitwise-equal results."""
+    c = ready + t_in
+    if c.size <= 1:
+        return c
+    bad = np.flatnonzero(c[:-1] > ready[1:])
+    i, K = 0, c.size
+    while i < bad.size:
+        k = int(bad[i]) + 1
+        prev = float(c[k - 1])
+        while k < K and prev > ready[k]:
+            prev = prev + t_in
+            c[k] = prev
+            k += 1
+        while i < bad.size and bad[i] < k:
+            i += 1
+    return c
+
+
+def _fill_count_exact(start: float, ready: float, t_tr: float) -> int:
+    now, m = start, 0
+    while now + t_tr <= ready and m < _MAX_EXACT_FILL:
+        now += t_tr
+        m += 1
+    return m
+
+
+def _fill_counts(ready: np.ndarray, completions: np.ndarray,
+                 t_tr: float) -> np.ndarray:
+    """Training minibatches filled into each batch's slack, matching the
+    reference's repeated-addition loop exactly. The vectorized estimate is
+    floor(slack / t_tr); only entries whose quotient sits within the
+    floating-point error bound of an integer boundary — where repeated
+    addition could round the other way — are replayed exactly."""
+    if not math.isfinite(t_tr) or t_tr <= 0.0:
+        return np.zeros(ready.size, np.int64)
+    start = np.empty_like(ready)
+    if ready.size:
+        start[0] = 0.0
+        start[1:] = completions[:-1]
+    slack = ready - start
+    q = slack / t_tr
+    m = np.maximum(np.floor(q), 0.0)
+    # |accumulated error| <= m*eps*max|s| and |division rounding| <= eps*q,
+    # both covered (generously) by this threshold in quotient units
+    thr = _EPS * (m + 4.0) * (2.0 + (np.abs(start) + np.abs(ready)) / t_tr)
+    suspicious = np.flatnonzero((slack > 0) & (np.abs(q - np.rint(q)) <= thr)
+                                & (m < _MAX_EXACT_FILL))
+    m = m.astype(np.int64)
+    for k in suspicious:
+        m[k] = _fill_count_exact(float(start[k]), float(ready[k]), t_tr)
+    return m
+
+
+def _queue_completions(ready: np.ndarray, exec_t: np.ndarray) -> np.ndarray:
+    """c_k = max(c_{k-1}, ready_k) + exec_k as one array program:
+    c_k = max_{j<=k}(ready_j - E_{j-1}) + E_k with E = cumsum(exec)."""
+    if ready.size == 0:
+        return ready.copy()
+    E = np.cumsum(exec_t)
+    offset = np.concatenate(([0.0], E[:-1]))
+    return np.maximum.accumulate(ready - offset) + E
+
+
+def _latencies(completions: np.ndarray, times: np.ndarray,
+               bs: int) -> np.ndarray:
+    return np.repeat(completions, bs) - times[:completions.size * bs]
+
+
+def _time_power(device: DeviceModel, w: WorkloadProfile, pm: PowerMode,
+                bs: Optional[int]) -> tuple[float, float]:
+    """Device timings are pure functions of (workload, mode, bs); memoize
+    them on the device instance so repeated executions (per-window
+    re-planning, benchmark sweeps) pay the deterministic-perturbation
+    hashing once, as the Profiler does. The cache dies with the device."""
+    cache = device.__dict__.setdefault("_simulate_time_power_cache", {})
+    key = (w, pm, bs)
+    out = cache.get(key)
+    if out is None:
+        out = cache[key] = device.time_power(w, pm, bs)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# the three execution approaches
+# ---------------------------------------------------------------------------
+
+def _managed_engine(device: DeviceModel, w_tr: Optional[WorkloadProfile],
+                    w_in: WorkloadProfile, pm: PowerMode, bs: int,
+                    trace: ArrivalTrace, seed: int = 0,
+                    tau_cap: Optional[int] = None) -> ExecutionReport:
+    """Fulcrum managed interleaving: one DNN at a time, switched at minibatch
+    boundaries; training fills slack conservatively (never delaying the next
+    inference batch). ``tau_cap`` bounds slack-fill at the plan's committed
+    tau_tr minibatches per cycle."""
+    t_in, p_in = _time_power(device, w_in, pm, bs)
+    t_tr, p_tr = _time_power(device, w_tr, pm, None) if w_tr \
+        else (float("inf"), 0.0)
+    ready = _batch_ready(trace.times, bs)
+    c = _managed_completions(ready, t_in)
+    trained = 0
+    if w_tr:
+        fills = _fill_counts(ready, c, t_tr)
+        if tau_cap is not None:
+            fills = np.minimum(fills, max(0, int(tau_cap)))
+        trained = int(fills.sum())
+    power = max(p_in, p_tr if trained else 0.0)
+    return ExecutionReport("managed", _latencies(c, trace.times, bs), trained,
+                           trace.duration, power, trace)
+
+
+def _native_engine(device: DeviceModel, w_tr: WorkloadProfile,
+                   w_in: WorkloadProfile, pm: PowerMode, bs: int,
+                   trace: ArrivalTrace, seed: int = 0,
+                   tau_cap: Optional[int] = None) -> ExecutionReport:
+    """Native kernel-level time-sharing: inference contends with training
+    (~2x slowdown +- jitter); training gets the leftover GPU share."""
+    rng = np.random.default_rng(seed)
+    t_in, p_in = _time_power(device, w_in, pm, bs)
+    t_tr, p_tr = _time_power(device, w_tr, pm, None)
+    ready = _batch_ready(trace.times, bs)
+    exec_t = t_in * (1.0 + rng.uniform(0.5, 1.6, ready.size))
+    c = _queue_completions(ready, exec_t)
+    train_share = max(0.0, trace.duration - float(exec_t.sum())) \
+        * float(rng.uniform(0.85, 0.95))
+    trained = int(train_share / t_tr)
+    return ExecutionReport("native", _latencies(c, trace.times, bs), trained,
+                           trace.duration, max(p_in, p_tr), trace)
+
+
+def _streams_engine(device: DeviceModel, w_tr: WorkloadProfile,
+                    w_in: WorkloadProfile, pm: PowerMode, bs: int,
+                    trace: ArrivalTrace, seed: int = 0,
+                    tau_cap: Optional[int] = None) -> ExecutionReport:
+    """CUDA-streams space sharing, inference on the high-priority stream:
+    throughput-friendly, but non-deterministic block-level resource blocking
+    fattens the tail."""
+    rng = np.random.default_rng(seed)
+    t_in, p_in = _time_power(device, w_in, pm, bs)
+    t_tr, p_tr = _time_power(device, w_tr, pm, None)
+    ready = _batch_ready(trace.times, bs)
+    K = ready.size
+    slowdown = 1.0 + rng.uniform(0.05, 0.45, K)
+    blocked = rng.random(K) < 0.18
+    extra = rng.uniform(0.5, 2.0, K) * (t_tr / max(t_in, 1e-6))
+    exec_t = t_in * (slowdown + np.where(blocked, extra, 0.0))
+    c = _queue_completions(ready, exec_t)
+    trained = int(trace.duration * float(rng.uniform(0.75, 0.9)) / t_tr)
+    return ExecutionReport("streams", _latencies(c, trace.times, bs), trained,
+                           trace.duration, max(p_in, p_tr) * 1.03, trace)
+
+
+ENGINES: dict[str, Callable[..., ExecutionReport]] = {
+    "managed": _managed_engine,
+    "native": _native_engine,
+    "streams": _streams_engine,
+}
+
+
+def simulate(device: DeviceModel, w_tr: Optional[WorkloadProfile],
+             w_in: WorkloadProfile, pm: PowerMode, bs: int,
+             trace: ArrivalTrace, approach: str = "managed", seed: int = 0,
+             tau_cap: Optional[int] = None) -> ExecutionReport:
+    """Run one execution approach over an arrival trace."""
+    try:
+        engine = ENGINES[approach]
+    except KeyError:
+        raise ValueError(f"unknown approach {approach!r}; "
+                         f"use one of {sorted(ENGINES)}") from None
+    return engine(device, w_tr, w_in, pm, bs, trace, seed, tau_cap)
+
+
+# ---------------------------------------------------------------------------
+# scalar reference loops (the seed implementations, generalized to traces).
+# Kept as the verification oracle for the identity tests and the baseline
+# for benchmarks/bench_interleave_engine.py — not for production use.
+# ---------------------------------------------------------------------------
+
+def managed_scalar(device: DeviceModel, w_tr: Optional[WorkloadProfile],
+                   w_in: WorkloadProfile, pm: PowerMode, bs: int,
+                   trace: ArrivalTrace,
+                   tau_cap: Optional[int] = None) -> ExecutionReport:
+    t_in, p_in = device.time_power(w_in, pm, bs)
+    t_tr, p_tr = device.time_power(w_tr, pm) if w_tr else (float("inf"), 0.0)
+    arrivals = trace.times.tolist()
+    latencies: list[float] = []
+    now, trained, i = 0.0, 0, 0
+    while i + bs <= len(arrivals):
+        batch_ready = arrivals[i + bs - 1]
+        filled = 0
+        while w_tr and now + t_tr <= batch_ready \
+                and (tau_cap is None or filled < tau_cap):
+            now += t_tr
+            trained += 1
+            filled += 1
+        now = max(now, batch_ready)
+        now += t_in
+        latencies.extend(now - arrivals[j] for j in range(i, i + bs))
+        i += bs
+    power = max(p_in, p_tr if trained else 0.0)
+    return ExecutionReport("managed", latencies, trained, trace.duration,
+                           power, trace)
+
+
+def native_scalar(device: DeviceModel, w_tr: WorkloadProfile,
+                  w_in: WorkloadProfile, pm: PowerMode, bs: int,
+                  trace: ArrivalTrace, seed: int = 0) -> ExecutionReport:
+    rng = random.Random(seed)
+    t_in, p_in = device.time_power(w_in, pm, bs)
+    t_tr, p_tr = device.time_power(w_tr, pm)
+    arrivals = trace.times.tolist()
+    latencies: list[float] = []
+    now, i, infer_busy = 0.0, 0, 0.0
+    while i + bs <= len(arrivals):
+        now = max(now, arrivals[i + bs - 1])
+        exec_t = t_in * (1.0 + rng.uniform(0.5, 1.6))
+        now += exec_t
+        infer_busy += exec_t
+        latencies.extend(now - arrivals[j] for j in range(i, i + bs))
+        i += bs
+    train_share = max(0.0, trace.duration - infer_busy) * rng.uniform(0.85, 0.95)
+    trained = int(train_share / t_tr)
+    return ExecutionReport("native", latencies, trained, trace.duration,
+                           max(p_in, p_tr), trace)
+
+
+def streams_scalar(device: DeviceModel, w_tr: WorkloadProfile,
+                   w_in: WorkloadProfile, pm: PowerMode, bs: int,
+                   trace: ArrivalTrace, seed: int = 0) -> ExecutionReport:
+    rng = random.Random(seed)
+    t_in, p_in = device.time_power(w_in, pm, bs)
+    t_tr, p_tr = device.time_power(w_tr, pm)
+    arrivals = trace.times.tolist()
+    latencies: list[float] = []
+    now, i = 0.0, 0
+    while i + bs <= len(arrivals):
+        now = max(now, arrivals[i + bs - 1])
+        slowdown = 1.0 + rng.uniform(0.05, 0.45)
+        if rng.random() < 0.18:
+            slowdown += rng.uniform(0.5, 2.0) * t_tr / max(t_in, 1e-6)
+        now += t_in * slowdown
+        latencies.extend(now - arrivals[j] for j in range(i, i + bs))
+        i += bs
+    trained = int(trace.duration * rng.uniform(0.75, 0.9) / t_tr)
+    return ExecutionReport("streams", latencies, trained, trace.duration,
+                           max(p_in, p_tr) * 1.03, trace)

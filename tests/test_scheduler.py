@@ -1,0 +1,193 @@
+"""Scenario registry + strategy caching + dynamic re-planning controller."""
+import pytest
+
+from repro.core import problem as P
+from repro.core import scheduler as sched
+from repro.core.device_model import (DeviceModel, INFER_WORKLOADS,
+                                     TRAIN_WORKLOADS)
+from repro.core.scheduler import (Fulcrum, Scenario, as_nonurgent,
+                                  available_strategies)
+from repro.core.simulate import ArrivalTrace
+
+DEV = DeviceModel()
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+def test_scenarios_share_canonical_solver_families():
+    assert Scenario.CONCURRENT_INFERENCE.canonical is Scenario.CONCURRENT
+    assert Scenario.DYNAMIC.canonical is Scenario.INFER
+    assert Scenario.TRAIN.canonical is Scenario.TRAIN
+    assert available_strategies(Scenario.CONCURRENT_INFERENCE) == \
+        available_strategies(Scenario.CONCURRENT)
+    for sc in Scenario:
+        assert "gmd" in available_strategies(sc)
+
+
+def test_unknown_strategy_raises_with_choices():
+    f = Fulcrum(DEV)
+    with pytest.raises(KeyError, match="als145"):
+        f.strategy_for(Scenario.INFER, "als9000", INFER_WORKLOADS["lstm"])
+
+
+def test_strategy_accepts_scenario_by_value():
+    f = Fulcrum(DEV)
+    s = f.strategy_for("infer", "rnd150", INFER_WORKLOADS["lstm"])
+    assert s is f.strategy_for(Scenario.INFER, "rnd150",
+                               INFER_WORKLOADS["lstm"])
+
+
+# ---------------------------------------------------------------------------
+# fitted-strategy caching (satellite: same workload+strategy reuses the
+# fitted object; GMD never caches)
+# ---------------------------------------------------------------------------
+
+def test_fitted_strategy_cached_per_workload():
+    f = Fulcrum(DEV)
+    w1, w2 = INFER_WORKLOADS["mobilenet"], INFER_WORKLOADS["lstm"]
+    a = f.strategy_for(Scenario.INFER, "rnd150", w1)
+    assert f.strategy_for(Scenario.INFER, "rnd150", w1) is a
+    assert f.strategy_for(Scenario.INFER, "rnd150", w2) is not a
+    assert f.strategy_for(Scenario.INFER, "rnd250", w1) is not a
+    # the dynamic scenario resolves to the same fitted infer object
+    assert f.strategy_for(Scenario.DYNAMIC, "rnd150", w1) is a
+
+
+def test_gmd_is_never_cached():
+    f = Fulcrum(DEV)
+    w = INFER_WORKLOADS["mobilenet"]
+    a = f.strategy_for(Scenario.INFER, "gmd", w)
+    b = f.strategy_for(Scenario.INFER, "gmd", w)
+    assert a is not b
+    assert not f._fitted                      # nothing was cached
+
+
+def test_solve_reuses_fitted_across_calls():
+    f = Fulcrum(DEV)
+    w = INFER_WORKLOADS["mobilenet"]
+    p1 = f.solve_infer(w, P.InferProblem(40.0, 0.5, 60.0), "rnd150")
+    runs_after_first = p1.profiling_runs
+    p2 = f.solve_infer(w, P.InferProblem(35.0, 0.4, 50.0), "rnd150")
+    # same fitted object answers the second problem: no new profiling
+    assert p2.profiling_runs == runs_after_first
+    assert len(f._fitted) == 1
+
+
+# ---------------------------------------------------------------------------
+# dynamic re-planning controller (satellite: profiler-cache reuse)
+# ---------------------------------------------------------------------------
+
+def test_solve_dynamic_gmd_reuses_profiler_cache(monkeypatch):
+    """GMD re-searches only when cached observations stop satisfying the
+    new rate: repeated/easier windows must not trigger new GMD searches."""
+    searches = []
+    real = sched.GMDInfer
+
+    class Counting(real):
+        def __init__(self, *a, **k):
+            searches.append(1)
+            super().__init__(*a, **k)
+
+    monkeypatch.setattr(sched, "GMDInfer", Counting)
+    f = Fulcrum(DEV)
+    w = INFER_WORKLOADS["mobilenet"]
+    rates = [60.0, 60.0, 30.0, 45.0, 60.0]
+    sols = f.solve_dynamic(w, 40.0, 0.5, rates, "gmd")
+    assert all(s is not None for s in sols)
+    assert len(searches) == 1     # only the first window really searched
+    for s in sols:
+        assert s.time <= 0.5 + 1e-9
+
+
+def test_solve_dynamic_fitted_strategy_reuses_model():
+    f = Fulcrum(DEV)
+    w = INFER_WORKLOADS["mobilenet"]
+    rates = [40.0, 60.0, 80.0]
+    a = f.solve_dynamic(w, 40.0, 0.5, rates, "rnd150")
+    b = f.solve_dynamic(w, 40.0, 0.5, rates, "rnd150")
+    assert len(f._fitted) == 1                # one fitted model, reused
+    assert [s and (s.pm, s.bs) for s in a] == [s and (s.pm, s.bs) for s in b]
+
+
+def test_serve_dynamic_emits_per_window_reports():
+    f = Fulcrum(DEV)
+    w = INFER_WORKLOADS["mobilenet"]
+    rates = [40.0, 70.0, 55.0]
+    windows = f.serve_dynamic(w, 40.0, 0.5, rates, "gmd",
+                              window_duration=10.0)
+    assert len(windows) == len(rates)
+    for wr in windows:
+        assert wr.solution is not None
+        assert wr.report is not None
+        assert wr.report.trace.kind == "uniform"
+        # the plan's guarantee holds exactly under the planned uniform rate
+        assert wr.report.violation_rate(0.5) == 0.0
+        assert len(wr.report.latencies) > 0
+    bursty = f.serve_dynamic(w, 40.0, 0.5, rates, "gmd",
+                             window_duration=10.0, arrivals="poisson")
+    for wr in bursty:
+        assert wr.report.trace.kind == "poisson"
+        # bursts may exceed the uniform-rate bound, but only in the tail
+        assert wr.report.violation_rate(0.5) < 0.05
+
+
+# ---------------------------------------------------------------------------
+# execute threads the plan through the engine (satellite)
+# ---------------------------------------------------------------------------
+
+def test_execute_threads_plan_and_returns_trace():
+    f = Fulcrum(DEV)
+    w_tr = TRAIN_WORKLOADS["mobilenet"]
+    w_in = INFER_WORKLOADS["mobilenet"]
+    prob = P.ConcurrentProblem(35.0, 1.0, 60.0)
+    plan = f.solve_concurrent(w_tr, w_in, prob, "gmd")
+    assert plan is not None and plan.scenario is Scenario.CONCURRENT
+    trace = ArrivalTrace.poisson(60.0, 20.0, seed=5)
+    rep = f.execute(plan, w_in, w_tr, trace=trace)
+    assert rep.trace is trace                 # the trace used is returned
+    n_batches = len(trace) // plan.solution.bs
+    # slack-fill is capped at the plan's committed tau_tr per cycle
+    assert rep.train_minibatches <= plan.solution.tau_tr * n_batches
+    assert rep.power <= prob.power_budget + 1e-9
+
+
+def test_execute_requires_inference_batch_size():
+    f = Fulcrum(DEV)
+    w = TRAIN_WORKLOADS["lstm"]
+    plan = f.solve_train(w, P.TrainProblem(30.0), "gmd")
+    with pytest.raises(ValueError, match="minibatch size"):
+        f.execute(plan, INFER_WORKLOADS["lstm"], arrival_rate=10.0)
+
+
+def test_execute_requires_rate_or_trace():
+    f = Fulcrum(DEV)
+    w = INFER_WORKLOADS["mobilenet"]
+    plan = f.solve_infer(w, P.InferProblem(40.0, 0.5, 60.0), "gmd")
+    with pytest.raises(ValueError, match="arrival_rate or a trace"):
+        f.execute(plan, w)
+
+
+def test_concurrent_inference_scenario_and_nonurgent_cast():
+    f = Fulcrum(DEV)
+    urgent = INFER_WORKLOADS["mobilenet"]
+    nonurgent = INFER_WORKLOADS["resnet50"]
+    w = as_nonurgent(nonurgent, 32)
+    assert w.train_bs == 32 and w.name.endswith("-nonurgent")
+    assert as_nonurgent(w) is w               # idempotent
+    prob = P.ConcurrentProblem(38.0, 1.0, 60.0)
+    plan = f.solve_concurrent_inference(nonurgent, urgent, prob, "gmd")
+    assert plan is not None
+    assert plan.scenario is Scenario.CONCURRENT_INFERENCE
+    assert plan.solution.power <= 38.0 + 1e-9
+    # the generic entry point applies the same cast — identical problem
+    generic = f.solve(Scenario.CONCURRENT_INFERENCE, (nonurgent, urgent),
+                      prob, "gmd")
+    assert generic.solution == plan.solution
+    # strategy_for applies it too: raw and pre-cast workloads share a model
+    s1 = f.strategy_for(Scenario.CONCURRENT_INFERENCE, "rnd150",
+                        nonurgent, urgent)
+    s2 = f.strategy_for(Scenario.CONCURRENT_INFERENCE, "rnd150",
+                        as_nonurgent(nonurgent), urgent)
+    assert s1 is s2 and len(f._fitted) == 1

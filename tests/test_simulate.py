@@ -1,0 +1,213 @@
+"""Trace-driven execution engine: the vectorized managed simulator must be
+*identical* (latencies, minibatch counts, power) to the seed's scalar loop
+across randomized (workload, pm, bs, rate) configs and every trace kind;
+native/streams are seeded-deterministic with the same queueing skeleton."""
+import numpy as np
+import pytest
+
+from repro.core import problem as P
+from repro.core import simulate as S
+from repro.core.device_model import (DeviceModel, INFER_WORKLOADS,
+                                     TRAIN_WORKLOADS)
+from repro.core.interleave import (simulate_managed, simulate_native,
+                                   simulate_streams)
+from repro.core.powermode import PowerModeSpace
+
+DEV = DeviceModel()
+SPACE = PowerModeSpace()
+MODES = SPACE.all_modes()
+
+
+def _random_config(rng):
+    w_tr = (list(TRAIN_WORKLOADS.values())[rng.integers(5)]
+            if rng.random() < 0.8 else None)
+    w_in = list(INFER_WORKLOADS.values())[rng.integers(5)]
+    pm = MODES[rng.integers(len(MODES))]
+    bs = [1, 4, 16, 32, 64][rng.integers(5)]
+    rate = float(rng.uniform(1.0, 120.0))
+    duration = float(rng.uniform(5.0, 60.0))
+    kind = int(rng.integers(3))
+    if kind == 0:
+        trace = S.ArrivalTrace.uniform(rate, duration)
+    elif kind == 1:
+        trace = S.ArrivalTrace.poisson(rate, duration,
+                                       seed=int(rng.integers(1000)))
+    else:
+        trace = S.ArrivalTrace.piecewise(
+            [float(rng.uniform(1.0, 100.0)) for _ in range(4)], duration / 4)
+    tau_cap = None if rng.random() < 0.7 else int(rng.integers(0, 4))
+    return w_tr, w_in, pm, bs, trace, tau_cap
+
+
+# ---------------------------------------------------------------------------
+# managed: vectorized kernel == scalar reference, exactly
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", range(8))
+def test_managed_identical_to_scalar_randomized(seed):
+    rng = np.random.default_rng(seed)
+    for _ in range(25):
+        w_tr, w_in, pm, bs, trace, tau_cap = _random_config(rng)
+        vec = S.simulate(DEV, w_tr, w_in, pm, bs, trace, "managed",
+                         tau_cap=tau_cap)
+        ref = S.managed_scalar(DEV, w_tr, w_in, pm, bs, trace,
+                               tau_cap=tau_cap)
+        assert vec.latencies.tolist() == ref.latencies
+        assert vec.train_minibatches == ref.train_minibatches
+        assert vec.power == ref.power
+        assert vec.duration == ref.duration
+
+
+def test_managed_backlogged_identical_to_scalar():
+    """Unsustainable config (t_in > bs/rate): the backlog-resolve path must
+    still match the scalar recurrence exactly."""
+    w_in = INFER_WORKLOADS["bert"]          # slow inference
+    w_tr = TRAIN_WORKLOADS["mobilenet"]
+    pm = MODES[0]                           # slowest mode
+    trace = S.ArrivalTrace.uniform(60.0, 20.0)
+    vec = S.simulate(DEV, w_tr, w_in, pm, 16, trace, "managed")
+    ref = S.managed_scalar(DEV, w_tr, w_in, pm, 16, trace)
+    t_in, _ = DEV.time_power(w_in, pm, 16)
+    assert not P.sustainable(16, 60.0, t_in)     # backlog really happens
+    assert vec.latencies.tolist() == ref.latencies
+    assert vec.train_minibatches == ref.train_minibatches
+
+
+def test_managed_wrapper_matches_seed_signature():
+    """The interleave.simulate_managed wrapper over a uniform trace equals
+    the scalar reference driven by the seed's arrival list."""
+    w_tr = TRAIN_WORKLOADS["mobilenet"]
+    w_in = INFER_WORKLOADS["mobilenet"]
+    pm = SPACE.maxn()
+    rep = simulate_managed(DEV, w_tr, w_in, pm, 16, 60.0, duration=30.0)
+    arrivals = [i / 60.0 for i in range(int(60.0 * 30.0))]   # seed loop
+    assert rep.trace.times.tolist() == arrivals
+    ref = S.managed_scalar(DEV, w_tr, w_in, pm, 16, rep.trace)
+    assert rep.latencies.tolist() == ref.latencies
+    assert rep.train_minibatches == ref.train_minibatches
+
+
+def test_managed_tau_cap_bounds_training_only():
+    """Threading the plan's tau_tr caps slack-fill without touching the
+    latency trajectory (training never delays inference)."""
+    w_tr = TRAIN_WORKLOADS["mobilenet"]
+    w_in = INFER_WORKLOADS["mobilenet"]
+    pm = SPACE.maxn()
+    trace = S.ArrivalTrace.uniform(60.0, 30.0)
+    free = S.simulate(DEV, w_tr, w_in, pm, 16, trace, "managed")
+    capped = S.simulate(DEV, w_tr, w_in, pm, 16, trace, "managed", tau_cap=1)
+    n_batches = len(trace) // 16
+    assert capped.train_minibatches <= n_batches
+    assert capped.train_minibatches <= free.train_minibatches
+    assert capped.latencies.tolist() == free.latencies.tolist()
+
+
+# ---------------------------------------------------------------------------
+# arrival traces
+# ---------------------------------------------------------------------------
+
+def test_uniform_trace_bitwise_matches_seed_arrivals():
+    for rate, duration in [(60.0, 30.0), (37.3, 17.9), (1.5, 120.0)]:
+        trace = S.ArrivalTrace.uniform(rate, duration)
+        assert trace.times.tolist() == \
+            [i / rate for i in range(int(rate * duration))]
+
+
+def test_poisson_trace_seeded_and_bounded():
+    a = S.ArrivalTrace.poisson(60.0, 30.0, seed=3)
+    b = S.ArrivalTrace.poisson(60.0, 30.0, seed=3)
+    c = S.ArrivalTrace.poisson(60.0, 30.0, seed=4)
+    assert np.array_equal(a.times, b.times)
+    assert not np.array_equal(a.times, c.times)
+    assert np.all(np.diff(a.times) > 0)
+    assert a.times[-1] < 30.0 and a.times[0] > 0.0
+    # ~rate*duration arrivals (Poisson concentration)
+    assert 0.7 * 1800 < len(a) < 1.3 * 1800
+
+
+def test_poisson_trace_idle_window_is_empty():
+    trace = S.ArrivalTrace.poisson(0.0, 30.0, seed=1)
+    assert len(trace) == 0 and trace.duration == 30.0
+    rep = S.simulate(DEV, None, INFER_WORKLOADS["lstm"], SPACE.maxn(), 4,
+                     trace, "managed")
+    assert len(rep.latencies) == 0 and rep.train_minibatches == 0
+
+
+def test_piecewise_trace_window_structure():
+    rates = [10.0, 0.0, 40.0]
+    trace = S.ArrivalTrace.piecewise(rates, 5.0)
+    assert trace.duration == 15.0
+    w0 = trace.times[trace.times < 5.0]
+    w1 = trace.times[(trace.times >= 5.0) & (trace.times < 10.0)]
+    w2 = trace.times[trace.times >= 10.0]
+    assert len(w0) == 50 and len(w1) == 0 and len(w2) == 200
+    assert np.all(np.diff(trace.times) >= 0)
+
+
+# ---------------------------------------------------------------------------
+# report statistics
+# ---------------------------------------------------------------------------
+
+def test_latency_quantile_nearest_rank():
+    rep = S.ExecutionReport("managed", [4.0, 1.0, 3.0, 2.0], 0, 1.0, 0.0)
+    assert rep.latency_quantile(0.75) == 3.0     # ceil(0.75*4)=3rd, not max
+    assert rep.latency_quantile(0.5) == 2.0
+    assert rep.latency_quantile(1.0) == 4.0
+    assert rep.latency_quantile(0.01) == 1.0
+    assert S.ExecutionReport("m", [], 0, 1.0, 0.0).latency_quantile(0.5) == 0.0
+
+
+def test_violation_rate_matches_loop():
+    xs = [0.1, 0.5, 0.2, 0.9]
+    rep = S.ExecutionReport("managed", np.asarray(xs), 0, 1.0, 0.0)
+    assert rep.violation_rate(0.3) == sum(1 for x in xs if x > 0.3) / len(xs)
+
+
+# ---------------------------------------------------------------------------
+# native / streams: seeded determinism + queueing skeleton
+# ---------------------------------------------------------------------------
+
+def test_native_streams_deterministic_per_seed():
+    w_tr = TRAIN_WORKLOADS["mobilenet"]
+    w_in = INFER_WORKLOADS["mobilenet"]
+    pm = SPACE.maxn()
+    for sim in (simulate_native, simulate_streams):
+        a = sim(DEV, w_tr, w_in, pm, 16, 60.0, duration=20.0, seed=1)
+        b = sim(DEV, w_tr, w_in, pm, 16, 60.0, duration=20.0, seed=1)
+        c = sim(DEV, w_tr, w_in, pm, 16, 60.0, duration=20.0, seed=2)
+        assert a.latencies.tolist() == b.latencies.tolist()
+        assert a.latencies.tolist() != c.latencies.tolist()
+
+
+def test_queue_completions_matches_sequential_recurrence():
+    rng = np.random.default_rng(0)
+    for _ in range(20):
+        K = int(rng.integers(1, 200))
+        ready = np.sort(rng.uniform(0, 50, K))
+        exec_t = rng.uniform(0.01, 2.0, K)
+        got = S._queue_completions(ready, exec_t)
+        now, want = 0.0, []
+        for r, e in zip(ready, exec_t):
+            now = max(now, r) + e
+            want.append(now)
+        np.testing.assert_allclose(got, np.asarray(want), rtol=1e-12)
+
+
+def test_managed_dominates_native_and_streams_tails():
+    """Fig. 2 shape is preserved by the vectorized engines."""
+    w_tr = TRAIN_WORKLOADS["mobilenet"]
+    w_in = INFER_WORKLOADS["mobilenet"]
+    pm = SPACE.maxn()
+    man = simulate_managed(DEV, w_tr, w_in, pm, 16, 60.0, duration=30.0)
+    nat = simulate_native(DEV, w_tr, w_in, pm, 16, 60.0, duration=30.0)
+    stc = simulate_streams(DEV, w_tr, w_in, pm, 16, 60.0, duration=30.0)
+    assert nat.latency_quantile(0.75) > man.latency_quantile(0.75)
+    assert stc.latency_quantile(0.95) > man.latency_quantile(0.95)
+    for rep in (man, nat, stc):
+        assert rep.trace is not None and len(rep.trace) == 1800
+
+
+def test_unknown_approach_raises():
+    with pytest.raises(ValueError, match="unknown approach"):
+        S.simulate(DEV, None, INFER_WORKLOADS["lstm"], SPACE.maxn(), 1,
+                   S.ArrivalTrace.uniform(10.0, 1.0), approach="magic")
