@@ -8,14 +8,13 @@ snapshotted to ``benchmarks/results/BENCH_interleave.json`` so it is tracked
 across PRs, mirroring bench_solver's BENCH_solver.json."""
 from __future__ import annotations
 
-import json
 import time
 from pathlib import Path
 
 from repro.core import simulate as S
 
 from benchmarks.bench_interleaving import solve_configs
-from benchmarks.common import DEV, row
+from benchmarks.common import DEV, row, snapshot
 
 SNAPSHOT = Path(__file__).parent / "results" / "BENCH_interleave.json"
 
@@ -67,7 +66,8 @@ def run(full: bool = False) -> list[str]:
         total_vector += vector_s
         speedup = scalar_s / vector_s
         results["approaches"][name] = {
-            "scalar_s": scalar_s, "vector_s": vector_s, "speedup": speedup}
+            "configs": len(solved), "scalar_s": scalar_s,
+            "vector_s": vector_s, "speedup": speedup}
         rows.append(row(f"interleave_engine/{name}/speedup", speedup,
                         f"scalar={scalar_s*1e3:.1f}ms;"
                         f"vector={vector_s*1e3:.1f}ms;n={len(solved)}"))
@@ -78,8 +78,7 @@ def run(full: bool = False) -> list[str]:
                     results["speedup"],
                     f"requests={results['requests_total']};"
                     f"configs={len(solved)}x3"))
-    SNAPSHOT.parent.mkdir(parents=True, exist_ok=True)
-    SNAPSHOT.write_text(json.dumps(results, indent=1))
+    snapshot(SNAPSHOT, results, configs=len(solved) * 3)
     return rows
 
 

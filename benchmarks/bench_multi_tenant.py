@@ -1,0 +1,152 @@
+"""Multi-tenant benchmark: N∈{2,3,4} inference streams concurrent with
+training under one power budget, swept across the 15 (train workload x N)
+combinations drawn from the paper's 5 train + 5 infer DNNs.
+
+Per combination: the oracle solves the whole problem grid with the batched
+multi-tenant grid solver on the NumPy *and* jax backends (both timed, results
+cross-checked), GMD plans the median solvable problem, and the N-stream
+managed engine executes it — per-tenant violation rates and training
+throughput are reported. Rows are printed as CSV and snapshotted to
+``benchmarks/results/BENCH_multi_tenant.json``.
+"""
+from __future__ import annotations
+
+import time
+from pathlib import Path
+
+from repro.core import problem as P
+from repro.core.device_model import INFER_WORKLOADS, TRAIN_WORKLOADS
+from repro.core.scheduler import Fulcrum
+
+from benchmarks.common import DEV, ORACLE, SPACE, loss_pct, median, row, \
+    snapshot
+
+SNAPSHOT = Path(__file__).parent / "results" / "BENCH_multi_tenant.json"
+
+# per-stream (rate, latency budget) matched to each DNN's service time scale
+STREAM_DEFAULTS = {
+    "mobilenet": (40.0, 0.8),
+    "lstm": (60.0, 0.5),
+    "resnet50": (25.0, 1.2),
+    "yolov8n": (20.0, 1.5),
+    "bert": (2.0, 4.0),
+}
+INFER_ORDER = ["mobilenet", "lstm", "resnet50", "yolov8n", "bert"]
+TRAIN_ORDER = ["resnet18", "mobilenet", "yolov8n", "bert", "lstm"]
+
+
+def _streams(train_idx: int, n: int) -> tuple:
+    """N heterogeneous streams: rotate the infer pool per train workload so
+    the 15 combos cover every pairing."""
+    names = [INFER_ORDER[(train_idx + k) % len(INFER_ORDER)]
+             for k in range(n)]
+    specs = []
+    for name in names:
+        rate, lat = STREAM_DEFAULTS[name]
+        specs.append(P.StreamSpec(rate, lat, INFER_WORKLOADS[name]))
+    return tuple(specs), names
+
+
+def _problem_grid(specs: tuple, full: bool) -> list:
+    """(power budget, latency scale, rate scale) sweep around the per-stream
+    defaults."""
+    pows = range(20, 56, 5) if full else (25, 35, 45, 55)
+    lat_scales = (0.75, 1.0, 1.5, 2.0) if full else (1.0, 1.5)
+    rate_scales = (0.5, 0.75, 1.0) if full else (0.5, 1.0)
+    probs = []
+    for pb in pows:
+        for ls in lat_scales:
+            for rs in rate_scales:
+                streams = tuple(
+                    P.StreamSpec(s.arrival_rate * rs, s.latency_budget * ls,
+                                 s.workload)
+                    for s in specs)
+                probs.append(P.MultiTenantProblem(float(pb), streams))
+    return probs
+
+
+def run(full: bool = False) -> list[str]:
+    rows: list[str] = []
+    results: dict = {"rows": []}
+    for n in (2, 3, 4):
+        for ti, tr_name in enumerate(TRAIN_ORDER):
+            w_tr = TRAIN_WORKLOADS[tr_name]
+            specs, stream_names = _streams(ti, n)
+            probs = _problem_grid(specs, full)
+            label = f"multi_tenant/{tr_name}+{n}x"
+
+            t0 = time.perf_counter()
+            opts_np = ORACLE.solve_multi_tenant_batch(w_tr, probs, "numpy")
+            numpy_s = time.perf_counter() - t0
+            try:
+                ORACLE.solve_multi_tenant_batch(w_tr, probs[:2], "jax")
+                t0 = time.perf_counter()
+                opts_jax = ORACLE.solve_multi_tenant_batch(w_tr, probs, "jax")
+                jax_s = time.perf_counter() - t0
+            except RuntimeError:          # jax unavailable: record honestly
+                opts_jax, jax_s = None, None
+            if opts_jax is not None:
+                for a, b in zip(opts_np, opts_jax):
+                    assert (a is None) == (b is None), "backend divergence"
+                    assert a is None or (a.pm, a.bss, a.tau_tr) == \
+                        (b.pm, b.bss, b.tau_tr), "backend divergence"
+
+            solvable = [(pr, opt) for pr, opt in zip(probs, opts_np)
+                        if opt is not None]
+            rec = {"n_streams": n, "train": tr_name,
+                   "streams": stream_names, "configs": len(probs),
+                   "solvable": len(solvable),
+                   "numpy_configs_per_s": len(probs) / numpy_s}
+            if jax_s is not None:
+                rec["jax_configs_per_s"] = len(probs) / jax_s
+            rows.append(row(f"{label}/solvable_pct",
+                            100.0 * len(solvable) / len(probs),
+                            f"streams={'+'.join(stream_names)};"
+                            f"configs={len(probs)}"))
+
+            if solvable:
+                # GMD on the median solvable problem + engine execution
+                prob, opt = solvable[len(solvable) // 2]
+                f = Fulcrum(DEV, SPACE)
+                plan = f.solve_multi_tenant(w_tr, prob, "gmd")
+                if plan is not None:
+                    sol = plan.solution
+                    rec["gmd"] = {
+                        "tput_loss_pct": loss_pct(opt.throughput,
+                                                  sol.throughput),
+                        "profiling_runs": plan.profiling_runs}
+                    rep = f.execute_multi_tenant(plan, prob, w_tr,
+                                                 duration=30.0)
+                    viols = rep.violation_rates(
+                        [s.latency_budget for s in prob.streams])
+                    rec["executed"] = {
+                        "configs": 1,
+                        "train_mb_per_s": rep.train_throughput,
+                        "power": rep.power,
+                        "per_tenant_violation_pct":
+                            [100.0 * v for v in viols],
+                        "worst_q95_ms":
+                            rep.worst_latency_quantile(0.95) * 1e3}
+                    rows.append(row(
+                        f"{label}/gmd/executed_worst_q95_ms",
+                        rep.worst_latency_quantile(0.95) * 1e3,
+                        f"viol_max_pct={100.0 * max(viols):.1f};"
+                        f"tput={rep.train_throughput:.2f}mb_s"))
+                oracle_tputs = [o.throughput for _, o in solvable]
+                rows.append(row(f"{label}/oracle/median_tput_mb_s",
+                                median(oracle_tputs),
+                                f"solvable={len(solvable)}"))
+            results["rows"].append(rec)
+
+    total = sum(r["configs"] for r in results["rows"])
+    results["configs"] = total
+    rows.append(row("multi_tenant/total_configs", total,
+                    f"combos={len(results['rows'])}"))
+    snapshot(SNAPSHOT, results, configs=total)
+    rows.append(row("multi_tenant/snapshot", 1, str(SNAPSHOT)))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

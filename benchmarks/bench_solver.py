@@ -9,7 +9,6 @@ the *entire* sweep. Results are printed as CSV rows and snapshotted to
 PRs."""
 from __future__ import annotations
 
-import json
 import time
 from pathlib import Path
 
@@ -17,8 +16,8 @@ from repro.core import grid_eval as G
 from repro.core import problem as P
 from repro.core.device_model import INFER_WORKLOADS, TRAIN_WORKLOADS
 
-from benchmarks.common import ORACLE, row, concurrent_problem_grid, \
-    infer_problem_grid, train_problem_grid
+from benchmarks.common import ORACLE, row, snapshot, \
+    concurrent_problem_grid, infer_problem_grid, train_problem_grid
 
 SNAPSHOT = Path(__file__).parent / "results" / "BENCH_solver.json"
 SCALAR_SAMPLE = 60          # scalar-loop problems timed per variant
@@ -107,8 +106,7 @@ def run(full: bool = False) -> list[str]:
     rows.append(row("solver/full_sweep/speedup_numpy", fs["speedup_numpy"],
                     f"n={total};numpy={fs['numpy_configs_per_s']:.0f}cfg/s"))
 
-    SNAPSHOT.parent.mkdir(parents=True, exist_ok=True)
-    SNAPSHOT.write_text(json.dumps(results, indent=1))
+    snapshot(SNAPSHOT, results, configs=total)
     rows.append(row("solver/snapshot", 1, str(SNAPSHOT)))
     return rows
 

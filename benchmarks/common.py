@@ -1,8 +1,10 @@
 """Shared helpers for the paper-figure benchmarks."""
 from __future__ import annotations
 
+import json
 import os
 import statistics
+from pathlib import Path
 from typing import Iterable, Optional
 
 from repro.core import problem as P
@@ -37,6 +39,27 @@ def row(name: str, value, derived: str = "") -> str:
     if isinstance(value, float):
         value = f"{value:.4g}"
     return f"{name},{value},{derived}"
+
+
+def snapshot(path: Path, results: dict, configs: Optional[int] = None) -> None:
+    """Write a ``benchmarks/results/BENCH_*.json`` snapshot. Every bench row
+    (top-level dict record) carries a ``configs`` count — the number of
+    problem/simulation configurations behind it — so the files are
+    self-describing across PRs. Records that already state a count under
+    another key (``problems``, ``configs``) keep it; ``configs`` is added."""
+    if configs is not None:
+        results.setdefault("configs", configs)
+    records = list(results.values())
+    if isinstance(results.get("rows"), list):
+        records += results["rows"]
+    for rec in records:
+        if isinstance(rec, dict) and "configs" not in rec:
+            for key in ("problems", "n_configs", "n"):
+                if key in rec:
+                    rec["configs"] = rec[key]
+                    break
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps(results, indent=1))
 
 
 def gmd_executed_row(fulcrum, solvable_pairs, plans, w_serve, w_fill,

@@ -12,8 +12,9 @@ import time
 from benchmarks import (bench_arch_fulcrum, bench_concurrent,
                         bench_concurrent_inference, bench_dynamic,
                         bench_infer, bench_interleave_engine,
-                        bench_interleaving, bench_roofline, bench_solver,
-                        bench_table1, bench_train)
+                        bench_interleaving, bench_multi_tenant,
+                        bench_roofline, bench_solver, bench_table1,
+                        bench_train)
 
 SUITES = {
     "fig2_interleaving": bench_interleaving.run,
@@ -22,6 +23,7 @@ SUITES = {
     "fig11_concurrent": bench_concurrent.run,
     "fig12_dynamic": bench_dynamic.run,
     "fig14_concurrent_infer": bench_concurrent_inference.run,
+    "multi_tenant": bench_multi_tenant.run,
     "table1_practitioner": bench_table1.run,
     "arch_fulcrum": bench_arch_fulcrum.run,
     "roofline": bench_roofline.run,

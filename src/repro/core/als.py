@@ -266,3 +266,119 @@ class ALSConcurrent:
             G.cached_grid(self, "_tgrid", self.cp.train.observed_modes(), "train"),
             G.cached_grid(self, "_igrid", self.cp.infer.observed(), "infer"),
             backend)
+
+
+# ---------------------------------------------------------------------------
+# multi-tenant: N streams, GSy sampling with per-stream predictors
+# ---------------------------------------------------------------------------
+
+class ALSMultiTenant:
+    """ALS over the N-stream problem: one mode visit profiles every stream
+    (and the train workload), per-stream NNs predict (time, power), and the
+    per-quadrant predicted Pareto of (dominant power, predicted training
+    throughput) guides sampling. Candidates use one shared bs per visit — a
+    sampling heuristic only; the solve scans the full per-stream cross
+    product of observations."""
+
+    def __init__(self, mtprofiler, ranges: QuadrantRanges,
+                 space: Optional[PowerModeSpace] = None,
+                 rounds: int = 3, init_modes: int = 25, per_quadrant: int = 10,
+                 nn_epochs: int = 400, seed: int = 0,
+                 batch_sizes=tuple(P.INFER_BATCH_SIZES)):
+        self.mp = mtprofiler
+        self.ranges = ranges
+        self.space = space or PowerModeSpace()
+        self.rounds, self.init_modes, self.per_quadrant = rounds, init_modes, per_quadrant
+        self.nn_epochs = nn_epochs
+        self.seed = seed
+        self.batch_sizes = list(batch_sizes)
+        self._fitted = False
+
+    def fit(self) -> None:
+        rng = random.Random(self.seed)
+        modes = self.space.all_modes()
+        n = self.mp.n_streams
+        for pm in rng.sample(modes, self.init_modes):
+            bs = rng.choice(self.batch_sizes)
+            self.mp.profile(pm, [bs] * n)
+
+        for rnd in range(self.rounds):
+            stream_nns = []
+            for j, prof in enumerate(self.mp.streams):
+                obs = prof.observed()
+                feats = np.array([mode_features(pm, bs) for (pm, bs) in obs])
+                nn_t = NNPredictor.fit(
+                    feats, np.array([t for t, _ in obs.values()]),
+                    epochs=self.nn_epochs, seed=2 * j + rnd)
+                nn_p = NNPredictor.fit(
+                    feats, np.array([p for _, p in obs.values()]),
+                    epochs=self.nn_epochs, seed=2 * j + rnd + 50)
+                stream_nns.append((nn_t, nn_p))
+            nn_tt = nn_pt = None
+            if self.mp.train:
+                tobs = self.mp.train.observed()
+                tfeats = np.array([mode_features(pm) for (pm, _) in tobs])
+                nn_tt = NNPredictor.fit(
+                    tfeats, np.array([t for t, _ in tobs.values()]),
+                    epochs=self.nn_epochs, seed=rnd + 100)
+                nn_pt = NNPredictor.fit(
+                    tfeats, np.array([p for _, p in tobs.values()]),
+                    epochs=self.nn_epochs, seed=rnd + 150)
+
+            visited = {(pm, bss[0]) for (pm, bss) in self.mp.visited}
+            test = [(pm, bs) for pm in modes for bs in self.batch_sizes
+                    if (pm, bs) not in visited]
+            if not test:
+                break
+            itf = np.array([mode_features(pm, bs) for pm, bs in test])
+            preds = [(nn_t.predict(itf), nn_p.predict(itf))
+                     for nn_t, nn_p in stream_nns]
+            if nn_tt is not None:
+                ttf = np.array([mode_features(pm) for pm, _ in test])
+                p_tt, p_pt = nn_tt.predict(ttf), nn_pt.predict(ttf)
+            seen_powers = [p for prof in self.mp.streams
+                           for (_, p) in prof.observed().values()]
+
+            for lat_rng, arr_rng in self.ranges.quadrants():
+                keep = {}
+                for i, (pm, bs) in enumerate(test):
+                    t_ins = [float(pt[i]) for pt, _ in preds]
+                    bss = [bs] * n
+                    rates = [arr_rng[0]] * n
+                    if not P.multi_sustainable(bss, rates, t_ins):
+                        continue
+                    if any(P.multi_peak_latency(bss, rates, t_ins, j)
+                           > lat_rng[1] for j in range(n)):
+                        continue
+                    dom_p = max(float(pp[i]) for _, pp in preds)
+                    if nn_tt is not None:
+                        t_tr = max(float(p_tt[i]), 1e-6)
+                        tau = P.multi_interleave_tau(bss, rates, t_ins, t_tr)
+                        obj = tau / P.multi_cycle(bss, rates)
+                        dom_p = max(dom_p, float(p_pt[i]))
+                    else:
+                        obj = -max(P.multi_peak_latency(bss, rates, t_ins, j)
+                                   for j in range(n))
+                    keep[(pm, bs)] = (dom_p, obj)
+                if not keep:
+                    continue
+                front = pareto_front(keep, lower_is_better=False)
+                cand_powers = {k: pw for k, (pw, _) in front.items()}
+                for pm, bs in _greedy_power_diverse(cand_powers, seen_powers,
+                                                    self.per_quadrant):
+                    self.mp.profile(pm, [bs] * n)
+                    seen_powers.append(
+                        self.mp.streams[0].observed()[(pm, bs)][1])
+        self._fitted = True
+
+    def solve(self, prob: P.MultiTenantProblem) -> Optional[P.MultiTenantSolution]:
+        return self.solve_batch([prob])[0]
+
+    def solve_batch(self, probs, backend: str = "numpy"):
+        if not self._fitted:
+            self.fit()
+        tgrid = G.cached_grid(self, "_tgrid", self.mp.train.observed_modes(),
+                              "train") if self.mp.train else None
+        igrids = [G.cached_grid(self, f"_igrid{j}", prof.observed(), "infer")
+                  for j, prof in enumerate(self.mp.streams)]
+        return G.solve_multi_tenant_batch(probs, tgrid, igrids, backend)

@@ -80,6 +80,40 @@ class RNDInfer:
         return G.solve_infer_batch(probs, grid, backend)
 
 
+class RNDMultiTenant:
+    """RND-k for N streams: k//5 random modes, every stream profiled at all
+    batch sizes per visit; answers ride the batched multi-tenant solver."""
+
+    def __init__(self, mtprofiler, k: int, space=None, seed: int = 0,
+                 batch_sizes=tuple(P.INFER_BATCH_SIZES)):
+        self.mp, self.k = mtprofiler, k
+        self.space = space or PowerModeSpace()
+        self.seed = seed
+        self.batch_sizes = list(batch_sizes)
+        self._fitted = False
+
+    def fit(self):
+        rng = random.Random(self.seed)
+        n_modes = max(1, self.k // len(self.batch_sizes))
+        for pm in rng.sample(self.space.all_modes(), n_modes):
+            for bs in self.batch_sizes:
+                self.mp.profile(pm, [bs] * self.mp.n_streams)
+        self._fitted = True
+
+    def solve(self, prob: P.MultiTenantProblem) -> Optional[P.MultiTenantSolution]:
+        return self.solve_batch([prob])[0]
+
+    def solve_batch(self, probs: Sequence[P.MultiTenantProblem],
+                    backend: str = "numpy") -> list:
+        if not self._fitted:
+            self.fit()
+        tgrid = G.cached_grid(self, "_tgrid", self.mp.train.observed_modes(),
+                              "train") if self.mp.train else None
+        igrids = [G.cached_grid(self, f"_igrid{j}", prof.observed(), "infer")
+                  for j, prof in enumerate(self.mp.streams)]
+        return G.solve_multi_tenant_batch(probs, tgrid, igrids, backend)
+
+
 class RNDConcurrent:
     def __init__(self, cprofiler: ConcurrentProfiler, k: int, space=None,
                  seed: int = 0, batch_sizes=tuple(P.INFER_BATCH_SIZES)):
@@ -240,3 +274,71 @@ class NNConcurrentBaseline:
         return G.solve_concurrent_batch(
             probs, G.cached_grid(self, "_tgrid", self._tpred, "train"),
             G.cached_grid(self, "_igrid", self._ipred, "infer"), backend)
+
+
+class NNMultiTenantBaseline:
+    """NN-k for N streams: per-stream time/power predictors answer from the
+    *predicted* dense grids (so, as in the pair case, the chosen plan can
+    violate budgets — the benchmark checks against ground truth)."""
+
+    def __init__(self, mtprofiler, k: int = 250, space=None, seed: int = 0,
+                 nn_epochs: int = 1000,
+                 batch_sizes=tuple(P.INFER_BATCH_SIZES)):
+        self.mp, self.k = mtprofiler, k
+        self.space = space or PowerModeSpace()
+        self.seed, self.nn_epochs = seed, nn_epochs
+        self.batch_sizes = list(batch_sizes)
+        self._pred = None
+
+    def fit(self):
+        rng = random.Random(self.seed)
+        n_modes = max(1, self.k // len(self.batch_sizes))
+        for pm in rng.sample(self.space.all_modes(), n_modes):
+            for bs in self.batch_sizes:
+                self.mp.profile(pm, [bs] * self.mp.n_streams)
+        modes = self.space.all_modes()
+        keys = [(pm, bs) for pm in modes for bs in self.batch_sizes]
+        imf = np.array([mode_features(pm, bs) for pm, bs in keys])
+        self._ipreds = []
+        for j, prof in enumerate(self.mp.streams):
+            obs = prof.observed()
+            feats = np.array([mode_features(pm, bs) for (pm, bs) in obs])
+            nn_t = NNPredictor.fit(feats,
+                                   np.array([t for t, _ in obs.values()]),
+                                   epochs=self.nn_epochs, seed=2 * j)
+            nn_p = NNPredictor.fit(feats,
+                                   np.array([p for _, p in obs.values()]),
+                                   epochs=self.nn_epochs, seed=2 * j + 1)
+            self._ipreds.append(
+                {k: (float(t), float(p)) for k, t, p in
+                 zip(keys, nn_t.predict(imf), nn_p.predict(imf))})
+        self._tpred = None
+        if self.mp.train:
+            tobs = self.mp.train.observed()
+            tfeats = np.array([mode_features(pm) for (pm, _) in tobs])
+            nn_tt = NNPredictor.fit(tfeats,
+                                    np.array([t for t, _ in tobs.values()]),
+                                    epochs=self.nn_epochs, seed=100)
+            nn_pt = NNPredictor.fit(tfeats,
+                                    np.array([p for _, p in tobs.values()]),
+                                    epochs=self.nn_epochs, seed=101)
+            tmf = np.array([mode_features(pm) for pm in modes])
+            self._tpred = {pm: (float(t), float(p)) for pm, t, p in
+                           zip(modes, nn_tt.predict(tmf), nn_pt.predict(tmf))}
+        self._tgrid = None                 # refit replaces predictions
+        for j in range(self.mp.n_streams):
+            setattr(self, f"_igrid{j}", None)
+        self._pred = True
+
+    def solve(self, prob: P.MultiTenantProblem) -> Optional[P.MultiTenantSolution]:
+        return self.solve_batch([prob])[0]
+
+    def solve_batch(self, probs: Sequence[P.MultiTenantProblem],
+                    backend: str = "numpy") -> list:
+        if self._pred is None:
+            self.fit()
+        tgrid = G.cached_grid(self, "_tgrid", self._tpred, "train") \
+            if self._tpred is not None else None
+        igrids = [G.cached_grid(self, f"_igrid{j}", pred, "infer")
+                  for j, pred in enumerate(self._ipreds)]
+        return G.solve_multi_tenant_batch(probs, tgrid, igrids, backend)

@@ -348,3 +348,185 @@ class GMDConcurrent(_GMDBase):
 
     def _note_candidate(self, pm, t, p):
         pass   # candidates tracked via _train_obs/_infer_obs
+
+
+# ---------------------------------------------------------------------------
+# multi-tenant: train + N inference streams
+# ---------------------------------------------------------------------------
+
+class MultiTenantProfiler:
+    """Profiles a train workload plus N inference streams: one visit to a
+    power mode runs every workload back-to-back (interleaved), counting a
+    single profiling run — the N-stream ConcurrentProfiler."""
+
+    def __init__(self, train_profiler: Optional[Profiler],
+                 stream_profilers: list):
+        self.train = train_profiler
+        self.streams = list(stream_profilers)
+        self.visited: set = set()
+
+    @property
+    def n_streams(self) -> int:
+        return len(self.streams)
+
+    @property
+    def num_runs(self) -> int:
+        return len(self.visited)
+
+    @property
+    def profile_cost_s(self) -> float:
+        cost = self.train.profile_cost_s if self.train else 0.0
+        return cost + sum(p.profile_cost_s for p in self.streams)
+
+    def profile(self, pm: PowerMode, bss):
+        train_tp = self.train.profile(pm) if self.train else None
+        stream_tps = [p.profile(pm, int(b))
+                      for p, b in zip(self.streams, bss)]
+        self.visited.add((pm, tuple(int(b) for b in bss)))
+        return train_tp, stream_tps
+
+    def infer_observed(self) -> list:
+        return [p.observed() for p in self.streams]
+
+
+class GMDMultiTenant(_GMDBase):
+    """GMD over the N-stream problem: branch-and-bound each stream's largest
+    feasible minibatch size at MAXN, bisect with the *dominant* workload's
+    slopes (one mode visit profiles all streams), then backtrack streams to
+    smaller bs. Profiling budget grows with the tenant count."""
+
+    def __init__(self, mtprofiler: MultiTenantProfiler, space=None,
+                 max_tries: Optional[int] = None,
+                 batch_sizes=tuple(P.INFER_BATCH_SIZES)):
+        n = mtprofiler.n_streams
+        if max_tries is None:
+            max_tries = 15 + 4 * (n - 1)       # 15 at N=1 (§5.1.4)
+        super().__init__(mtprofiler.streams[0], space, max_tries)
+        self.mp = mtprofiler
+        self.batch_sizes = list(batch_sizes)
+
+    def solve(self, prob: P.MultiTenantProblem) -> Optional[P.MultiTenantSolution]:
+        self._prob = prob
+        maxn = self.space.maxn()
+        rates = [s.arrival_rate for s in prob.streams]
+
+        # Branch and bound per stream: largest bs whose solo latency MAXN
+        # can meet — any slower mode only increases execution time, so
+        # bigger bs are dead (cf. GMDConcurrent step E).
+        allowed = []
+        chosen = []
+        for j, spec in enumerate(prob.streams):
+            allowed.append([b for b in self.batch_sizes
+                            if spec.batch_sizes is None
+                            or b in spec.batch_sizes])
+            pick = None
+            for bs in sorted(allowed[j], reverse=True):
+                t_in, _ = self.mp.streams[j].profile(maxn, bs)
+                lam = P.peak_latency(bs, spec.arrival_rate, t_in)
+                if lam <= spec.latency_budget and \
+                        P.sustainable(bs, spec.arrival_rate, t_in):
+                    pick = bs
+                    break
+            if pick is None:
+                return None
+            chosen.append(pick)
+        # Blocking-aware shrink to fixpoint (the N>1 coupling the pair B&B
+        # has no analogue for): with every tenant at its solo pick, a
+        # stream's peak latency also carries the other tenants' service
+        # times — shrink violating streams one step until all budgets fit
+        # at MAXN (profiles are cached, so re-evaluation is free).
+        while len(chosen) > 1:
+            t_ins = [self.mp.streams[j].profile(maxn, b)[0]
+                     for j, b in enumerate(chosen)]
+
+            def shrink(k) -> bool:
+                lower = [b for b in allowed[k] if b < chosen[k]]
+                if lower:
+                    chosen[k] = max(lower)
+                return bool(lower)
+
+            viol = [j for j, spec in enumerate(prob.streams)
+                    if P.multi_peak_latency(chosen, rates, t_ins, j)
+                    > spec.latency_budget]
+            if not viol:
+                break
+            moved = False
+            for j in viol:
+                # own queueing + service overruns -> only stream j can help
+                if P.peak_latency(chosen[j], rates[j], t_ins[j]) \
+                        > prob.streams[j].latency_budget:
+                    moved |= shrink(j)
+            if not moved:
+                # blocking-bound: the largest service time is the blocker
+                for k in sorted(range(len(chosen)),
+                                key=lambda k: -t_ins[k]):
+                    if shrink(k):
+                        moved = True
+                        break
+            if not moved:
+                break
+        if self.mp.train:
+            self.mp.train.profile(maxn)
+        self.mp.visited.add((maxn, tuple(chosen)))
+        self._bss = chosen
+
+        self.search()
+        sol = self._solve_obs()
+        if sol is not None:
+            return sol
+
+        # Backtracking: shrink one stream at a time (largest-contribution
+        # first) on modes that keep up with every arrival rate.
+        cands = []
+        obs = self.mp.infer_observed()
+        for pm in {pm for (pm, _) in self.mp.visited}:
+            if pm == maxn:
+                continue
+            try:
+                t_ins = [obs[j][(pm, b)][0] for j, b in enumerate(self._bss)]
+            except KeyError:
+                continue
+            if all(P.sustainable(b, r, t)
+                   for b, r, t in zip(self._bss, rates, t_ins)):
+                cands.append((pm, max(t_ins)))
+        cands.sort(key=lambda x: x[1])
+        for j in range(self.mp.n_streams):
+            lower = [b for b in self.batch_sizes if b < self._bss[j]]
+            for bs in sorted(lower, reverse=True):
+                for pm, _ in cands:
+                    if self.mp.num_runs >= self.max_tries:
+                        return self._solve_obs()
+                    bss = list(self._bss)
+                    bss[j] = bs
+                    self.mp.profile(pm, bss)
+                    sol = self._solve_obs()
+                    if sol is not None:
+                        return sol
+        return self._solve_obs()
+
+    def _solve_obs(self):
+        train_obs = self.mp.train.observed_modes() if self.mp.train else None
+        return P.solve_multi_tenant(self._prob, train_obs,
+                                    self.mp.infer_observed())
+
+    # -- hooks: profile everything, dominant workload drives the slopes -----
+    def _profile(self, pm):
+        train_tp, stream_tps = self.mp.profile(pm, self._bss)
+        cands = list(stream_tps) + ([train_tp] if train_tp else [])
+        t_dom, p_dom = max(cands, key=lambda tp: tp[1])   # dominant = max power
+        p_sys = max(p for _, p in cands)
+        return t_dom, p_sys
+
+    def _runs_used(self):
+        return self.mp.num_runs
+
+    def _power_budget(self):
+        return self._prob.power_budget
+
+    def _need_reserve(self) -> bool:
+        return self._solve_obs() is None
+
+    RESERVE = 3
+
+    def _note_candidate(self, pm, t, p):
+        pass   # candidates tracked via the profilers' caches

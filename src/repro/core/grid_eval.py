@@ -449,6 +449,219 @@ def solve_concurrent_batch(problems: Sequence[P.ConcurrentProblem],
 
 
 # ---------------------------------------------------------------------------
+# multi-tenant: N inference streams + optional training fill (problem.
+# solve_multi_tenant batched). Candidates are the cross-product of per-stream
+# (pm, bs) grid entries sharing one mode, enumerated stream-0-major in grid
+# order — the scalar reference's exact scan (and tie-break) order.
+# ---------------------------------------------------------------------------
+
+_MISS = object()
+
+
+class _MultiCandidates:
+    """Columnar joint candidate set for one (stream grids, specs) tuple."""
+
+    def __init__(self, grids: Sequence[ObservationGrid],
+                 train_grid: Optional[ObservationGrid],
+                 specs: Sequence) -> None:
+        n = len(grids)
+        masks = []
+        for g, spec in zip(grids, specs):
+            if spec.batch_sizes is None:
+                masks.append(None)
+            else:
+                allowed = set(int(b) for b in spec.batch_sizes)
+                masks.append(np.fromiter((int(b) in allowed for b in g.bs),
+                                         bool, len(g)))
+        # streams 1..n-1: {pm: [flat indices]} in grid order
+        by_pm: list[dict] = []
+        for g, m in zip(grids[1:], masks[1:]):
+            d: dict = {}
+            for i in range(len(g)):
+                if m is None or m[i]:
+                    d.setdefault(g.modes[i], []).append(i)
+            by_pm.append(d)
+        tindex = None if train_grid is None else train_grid.index
+        inner_cache: dict = {}
+        cols: list[list] = [[] for _ in range(n)]
+        g0, m0 = grids[0], masks[0]
+        for i in range(len(g0)):
+            if m0 is not None and not m0[i]:
+                continue
+            pm = g0.modes[i]
+            if tindex is not None and pm not in tindex:
+                continue
+            blk = inner_cache.get(pm, _MISS)
+            if blk is _MISS:
+                lists = [d.get(pm) for d in by_pm]
+                if any(ls is None for ls in lists):
+                    blk = None
+                else:
+                    mesh = np.meshgrid(*[np.asarray(ls, np.int64)
+                                         for ls in lists], indexing="ij") \
+                        if lists else []
+                    blk = [mg.ravel() for mg in mesh]
+                inner_cache[pm] = blk
+            if blk is None:
+                continue
+            width = blk[0].size if blk else 1
+            cols[0].append(np.full(width, i, np.int64))
+            for j, b in enumerate(blk):
+                cols[j + 1].append(b)
+        if cols[0]:
+            self.idx = [np.concatenate(c) for c in cols]
+        else:
+            self.idx = [np.empty(0, np.int64) for _ in range(n)]
+        K = self.idx[0].size
+        self.K, self.n = K, n
+        self.modes = [grids[0].modes[int(i)] for i in self.idx[0]]
+        self.t_in = np.empty((K, n))
+        self.bsf = np.empty((K, n))
+        self.bss = np.empty((K, n), np.int64)
+        pmax = np.full(K, -np.inf)
+        for j, g in enumerate(grids):
+            ix = self.idx[j]
+            self.t_in[:, j] = g.t[ix]
+            self.bss[:, j] = g.bs[ix]
+            self.bsf[:, j] = self.bss[:, j].astype(np.float64)
+            pmax = np.maximum(pmax, g.p[ix])
+        if train_grid is not None:
+            tpos = np.fromiter((tindex[pm] for pm in self.modes), np.int64, K)
+            self.t_tr = train_grid.t[tpos]
+            pmax = np.maximum(pmax, train_grid.p[tpos])
+        else:
+            self.t_tr = None
+        self.pmax = pmax
+
+
+def _multi_spec_key(specs) -> tuple:
+    """The per-stream structure that must be uniform across a problem batch:
+    the observation sets are shared, so workloads and allowed batch sizes
+    must match (rates and budgets may vary)."""
+    return tuple((getattr(s.workload, "name", s.workload),
+                  None if s.batch_sizes is None else tuple(s.batch_sizes))
+                 for s in specs)
+
+
+def _multi_rate_arrays(cand: "_MultiCandidates", rates: np.ndarray):
+    """(sustainable candidate subset, per-candidate lam/tau/theta) for one
+    per-stream rate vector — the rate-independent part of the reduction.
+    Replays problem.multi_* op-for-op (single stream = the pair exprs)."""
+    t_in, bsf, n = cand.t_in, cand.bsf, cand.n
+    cycle = bsf / rates[None, :]
+    sus = (t_in <= cycle).all(axis=1)
+    if n == 1:
+        base = cycle[:, 0]
+        slack = base - t_in[:, 0]
+        lam = (bsf - 1.0) / rates[None, :] + t_in
+    else:
+        base = cycle.min(axis=1)
+        busy = np.zeros(cand.K)
+        for j in range(n):
+            busy += t_in[:, j] * (base * rates[j] / bsf[:, j])
+        slack = base - busy
+        sus &= slack >= 0.0
+        total = np.zeros(cand.K)
+        for j in range(n):
+            total += t_in[:, j]
+        lam = (bsf - 1.0) / rates[None, :] + t_in
+        lam = lam + (total[:, None] - t_in)
+    keep = np.flatnonzero(sus)
+    if cand.t_tr is not None:
+        tau = np.maximum(np.floor(slack[keep] / cand.t_tr[keep]), 0.0)
+        theta = tau / base[keep]
+    else:
+        tau = theta = None
+    return keep, lam[keep], tau, theta
+
+
+def solve_multi_tenant_batch(problems: Sequence["P.MultiTenantProblem"],
+                             train_obs: Optional[Union[dict, ObservationGrid]],
+                             infer_obs: Sequence[Union[dict, ObservationGrid]],
+                             backend: str = "numpy"
+                             ) -> list[Optional["P.MultiTenantSolution"]]:
+    """Batched ``problem.solve_multi_tenant``: every problem must share the
+    stream count, train flag, and per-stream batch-size restrictions; rates,
+    latency budgets, and power budgets vary per problem."""
+    _check_backend(backend)
+    out: list[Optional[P.MultiTenantSolution]] = [None] * len(problems)
+    if not len(problems):
+        return out
+    p0 = problems[0]
+    n = p0.n_streams
+    if len(infer_obs) != n:
+        raise ValueError(f"expected {n} observation sets, got {len(infer_obs)}")
+    skey = _multi_spec_key(p0.streams)
+    for pr in problems:
+        if pr.n_streams != n or pr.train != p0.train \
+                or _multi_spec_key(pr.streams) != skey:
+            raise ValueError("solve_multi_tenant_batch needs a uniform "
+                             "stream shape (count, train flag, workloads, "
+                             "batch sizes) across the problem batch")
+    grids = [as_infer_grid(o) for o in infer_obs]
+    tg = as_train_grid(train_obs) if p0.train else None
+    if any(not len(g) for g in grids) or (tg is not None and not len(tg)):
+        return out
+    cand = _MultiCandidates(grids, tg, p0.streams)
+    if not cand.K:
+        return out
+    pb = np.fromiter((pr.power_budget for pr in problems), np.float64,
+                     len(problems))
+    ar = np.array([[s.arrival_rate for s in pr.streams] for pr in problems])
+    lb = np.array([[s.latency_budget for s in pr.streams] for pr in problems])
+    if backend == "jax":
+        return _solve_multi_jax(problems, cand, pb, ar, lb, out)
+    rates, inverse = np.unique(ar, axis=0, return_inverse=True)
+    inverse = inverse.reshape(-1)
+    for ri in range(rates.shape[0]):
+        sel = np.flatnonzero(inverse == ri)
+        keep, lam, tau, theta = _multi_rate_arrays(cand, rates[ri])
+        if not keep.size:
+            continue
+        pm_c = cand.pmax[keep]
+        worst = lam.max(axis=1)
+        for s, e in _chunks(sel.size, keep.size * n):
+            rows = sel[s:e]
+            feas = ((pm_c[None, :] <= pb[rows, None])
+                    & (lam[None, :, :] <= lb[rows, None, :]).all(axis=2))
+            if theta is not None:
+                th = np.where(feas, theta[None, :], -np.inf)
+                best = th.max(axis=1)
+                masked = np.where(feas & (th >= best[:, None]), worst, np.inf)
+            else:
+                masked = np.where(feas, worst, np.inf)
+            idx = np.argmin(masked, axis=1)
+            for k in np.flatnonzero(feas.any(axis=1)):
+                j = int(idx[k])
+                i = int(keep[j])
+                out[rows[k]] = P.MultiTenantSolution(
+                    pm=cand.modes[i], bss=tuple(int(b) for b in cand.bss[i]),
+                    tau_tr=None if tau is None else int(tau[j]),
+                    times=tuple(float(x) for x in lam[j]),
+                    power=float(cand.pmax[i]),
+                    throughput=0.0 if theta is None else float(theta[j]))
+    return out
+
+
+def _solve_multi_jax(problems, cand: "_MultiCandidates", pb, ar, lb, out):
+    kern = _jax_kernels()["multi_train" if cand.t_tr is not None
+                         else "multi_infer"]
+    args = (cand.t_in, cand.bsf, cand.pmax) + (
+        (cand.t_tr,) if cand.t_tr is not None else ())
+    for s, e in _chunks(len(problems), cand.K * cand.n):
+        idx, ok, tau_s, theta_s, lam_s = kern(*args, pb[s:e], ar[s:e], lb[s:e])
+        for k in np.flatnonzero(ok):
+            i = int(idx[k])
+            out[s + k] = P.MultiTenantSolution(
+                pm=cand.modes[i], bss=tuple(int(b) for b in cand.bss[i]),
+                tau_tr=None if cand.t_tr is None else int(tau_s[k]),
+                times=tuple(float(x) for x in lam_s[k]),
+                power=float(cand.pmax[i]),
+                throughput=float(theta_s[k]))
+    return out
+
+
+# ---------------------------------------------------------------------------
 # jax backend: jit + vmap over the problem axis, float64 via enable_x64 so
 # the on-accelerator reduction keeps the NumPy path's exactness
 # ---------------------------------------------------------------------------
@@ -498,6 +711,50 @@ def _jax_kernels() -> dict:
             return jnp.argmin(lam_masked), feas.any(), tau, theta, lam
         return jax.vmap(one)(pb, lb, ar)
 
+    def _multi_one(t_in, bsf, pmax, t_tr, b_p, b_a, b_l):
+        n = t_in.shape[1]
+        cycle = bsf / b_a[None, :]
+        sus = (t_in <= cycle).all(axis=1)
+        if n == 1:
+            base = cycle[:, 0]
+            slack = base - t_in[:, 0]
+            lam = (bsf - 1.0) / b_a[None, :] + t_in
+        else:
+            base = cycle.min(axis=1)
+            busy = jnp.zeros(t_in.shape[0])
+            total = jnp.zeros(t_in.shape[0])
+            for j in range(n):        # stream order, as the scalar reference
+                busy = busy + t_in[:, j] * (base * b_a[j] / bsf[:, j])
+                total = total + t_in[:, j]
+            slack = base - busy
+            sus = sus & (slack >= 0.0)
+            lam = (bsf - 1.0) / b_a[None, :] + t_in
+            lam = lam + (total[:, None] - t_in)
+        feas = sus & (pmax <= b_p) & (lam <= b_l[None, :]).all(axis=1)
+        worst = lam.max(axis=1)
+        if t_tr is None:
+            tau = jnp.zeros(t_in.shape[0])
+            theta = jnp.zeros(t_in.shape[0])
+            masked = jnp.where(feas, worst, jnp.inf)
+        else:
+            tau = jnp.where(
+                feas, jnp.maximum(jnp.floor(slack / t_tr), 0.0), 0.0)
+            theta = jnp.where(feas, tau / base, -jnp.inf)
+            best = theta.max()
+            masked = jnp.where(feas & (theta >= best), worst, jnp.inf)
+        i = jnp.argmin(masked)
+        return i, feas.any(), tau[i], theta[i], lam[i]
+
+    @jax.jit
+    def multi_train_kernel(t_in, bsf, pmax, t_tr, pb, ar, lb):
+        return jax.vmap(lambda p, a, l: _multi_one(
+            t_in, bsf, pmax, t_tr, p, a, l))(pb, ar, lb)
+
+    @jax.jit
+    def multi_infer_kernel(t_in, bsf, pmax, pb, ar, lb):
+        return jax.vmap(lambda p, a, l: _multi_one(
+            t_in, bsf, pmax, None, p, a, l))(pb, ar, lb)
+
     def x64(fn):
         def wrapped(*args):
             with enable_x64():
@@ -507,5 +764,7 @@ def _jax_kernels() -> dict:
 
     _JAX_CACHE.update({"train": x64(train_kernel),
                        "infer": x64(infer_kernel),
-                       "concurrent": x64(concurrent_kernel)})
+                       "concurrent": x64(concurrent_kernel),
+                       "multi_train": x64(multi_train_kernel),
+                       "multi_infer": x64(multi_infer_kernel)})
     return _JAX_CACHE

@@ -95,3 +95,25 @@ class Oracle:
                                backend: str = "numpy") -> list[Optional[P.Solution]]:
         return G.solve_concurrent_batch(probs, self.train_grid(w_tr),
                                         self.infer_grid(w_in), backend)
+
+    # -- multi-tenant: stream workloads come from the problem's specs -------
+    def solve_multi_tenant(self, w_tr: Optional[WorkloadProfile],
+                           prob: P.MultiTenantProblem,
+                           backend: str = "numpy"):
+        return self.solve_multi_tenant_batch(w_tr, [prob], backend)[0]
+
+    def solve_multi_tenant_batch(self, w_tr: Optional[WorkloadProfile],
+                                 probs: Sequence[P.MultiTenantProblem],
+                                 backend: str = "numpy"
+                                 ) -> list[Optional[P.MultiTenantSolution]]:
+        """Ground-truth N-stream solves: one dense grid per distinct stream
+        workload (shared streams share the materialization)."""
+        if not probs:
+            return []
+        specs = probs[0].streams
+        if any(s.workload is None for s in specs):
+            raise ValueError("oracle multi-tenant solves need StreamSpec."
+                             "workload set on every stream")
+        grids = [self.infer_grid(s.workload) for s in specs]
+        tg = self.train_grid(w_tr) if probs[0].train else None
+        return G.solve_multi_tenant_batch(probs, tg, grids, backend)

@@ -1,14 +1,22 @@
-"""Problem formulation (§4): the three optimization variants, the managed-
+"""Problem formulation (§4): the optimization variants, the managed-
 interleaving feasibility math, and the observed-profile solver every strategy
 (oracle, RND, ALS, GMD backtracking) shares.
 
 Notation follows Table 2: a solution is (pm [, beta_in [, tau_tr]]).
+
+The paper evaluates a training+inference *pair*; the multi-tenant
+generalization (``StreamSpec`` / ``MultiTenantProblem`` /
+``solve_multi_tenant``) models N inference streams sharing the accelerator
+with an optional training fill workload. ``ConcurrentProblem`` and
+``InferProblem`` are the N=1 views of it: ``as_multi_tenant()`` lifts them,
+and the N=1 multi-tenant math replays the pair expressions bitwise (the
+exactness contract enforced by ``tests/test_multi_tenant.py``).
 """
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Optional
+from typing import Optional, Sequence
 
 from repro.core.powermode import PowerMode
 
@@ -26,12 +34,86 @@ class InferProblem:
     latency_budget: float                     # lambda-hat (s/request, peak)
     arrival_rate: float                       # alpha (requests/s)
 
+    def as_multi_tenant(self, workload=None,
+                        batch_sizes=None) -> "MultiTenantProblem":
+        """This problem as a single-stream multi-tenant problem (no train)."""
+        return MultiTenantProblem(
+            self.power_budget,
+            (StreamSpec(self.arrival_rate, self.latency_budget, workload,
+                        batch_sizes),),
+            train=False)
+
 
 @dataclasses.dataclass(frozen=True)
 class ConcurrentProblem:
     power_budget: float
     latency_budget: float
     arrival_rate: float
+
+    def as_multi_tenant(self, workload=None,
+                        batch_sizes=None) -> "MultiTenantProblem":
+        """This problem as a train + single-stream multi-tenant problem."""
+        return MultiTenantProblem(
+            self.power_budget,
+            (StreamSpec(self.arrival_rate, self.latency_budget, workload,
+                        batch_sizes),),
+            train=True)
+
+
+# ---------------------------------------------------------------------------
+# multi-tenant problems: one train workload + N inference streams
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class StreamSpec:
+    """One inference tenant: its arrival rate, per-request latency budget,
+    the workload it runs (a WorkloadProfile; opaque to this layer), and the
+    minibatch sizes its plan may choose (None = any observed size)."""
+    arrival_rate: float
+    latency_budget: float
+    workload: Optional[object] = None
+    batch_sizes: Optional[tuple] = None
+
+    def with_rate(self, rate: float) -> "StreamSpec":
+        return dataclasses.replace(self, arrival_rate=float(rate))
+
+
+@dataclasses.dataclass(frozen=True)
+class MultiTenantProblem:
+    """N tenant inference streams sharing one accelerator (and one power
+    mode) with — when ``train`` — a training workload filling the slack.
+    Primary objective: max training throughput (min worst-tenant latency
+    when ``train`` is False); secondary: min worst-tenant latency."""
+    power_budget: float
+    streams: tuple
+    train: bool = True
+
+    def __post_init__(self):
+        object.__setattr__(self, "streams", tuple(self.streams))
+        if not self.streams:
+            raise ValueError("MultiTenantProblem needs at least one stream")
+
+    @property
+    def n_streams(self) -> int:
+        return len(self.streams)
+
+    def pair_view(self) -> ConcurrentProblem:
+        """The equivalent pair problem (requires exactly one stream)."""
+        if self.n_streams != 1:
+            raise ValueError(f"{self.n_streams} streams have no pair view")
+        s = self.streams[0]
+        if self.train:
+            return ConcurrentProblem(self.power_budget, s.latency_budget,
+                                     s.arrival_rate)
+        raise ValueError("pair_view of a no-train problem is an InferProblem; "
+                         "use infer_view()")
+
+    def infer_view(self) -> InferProblem:
+        if self.n_streams != 1:
+            raise ValueError(f"{self.n_streams} streams have no infer view")
+        s = self.streams[0]
+        return InferProblem(self.power_budget, s.latency_budget,
+                            s.arrival_rate)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -43,6 +125,34 @@ class Solution:
     time: float = 0.0            # train minibatch time or inference latency
     power: float = 0.0
     throughput: float = 0.0      # training minibatches/s (concurrent)
+
+
+@dataclasses.dataclass(frozen=True)
+class MultiTenantSolution:
+    """A committed multi-tenant plan: one power mode, one minibatch size per
+    stream, the interleave factor, and the per-stream achieved latencies."""
+    pm: PowerMode
+    bss: tuple                   # one minibatch size per stream
+    tau_tr: Optional[int] = None
+    times: tuple = ()            # per-stream peak latency (s)
+    power: float = 0.0
+    throughput: float = 0.0      # training minibatches/s (0 when no train)
+
+    @property
+    def time(self) -> float:
+        """Worst-tenant peak latency."""
+        return max(self.times) if self.times else 0.0
+
+    @property
+    def bs(self) -> Optional[int]:
+        """The single-stream view's minibatch size (N=1 only)."""
+        return int(self.bss[0]) if len(self.bss) == 1 else None
+
+    def stream_solution(self, i: int) -> Solution:
+        """Stream ``i``'s slice of the plan as a pair-shaped Solution."""
+        return Solution(pm=self.pm, bs=int(self.bss[i]), tau_tr=self.tau_tr,
+                        time=float(self.times[i]), power=self.power,
+                        throughput=self.throughput)
 
 
 # ---------------------------------------------------------------------------
@@ -74,6 +184,64 @@ def train_throughput(bs: int, arrival_rate: float, t_in: float, t_tr: float) -> 
     """theta_tr under managed interleaving (train minibatches / s)."""
     tau = interleave_tau(bs, arrival_rate, t_in, t_tr)
     return tau / (bs / arrival_rate)
+
+
+# ---------------------------------------------------------------------------
+# N-stream feasibility math. One stream replays the pair expressions bitwise;
+# N > 1 charges each stream's service time pro-rata against the shortest
+# stream period (the base interleaving cycle) and adds worst-case head-of-
+# line blocking (one in-flight batch of every other tenant) to peak latency.
+# ---------------------------------------------------------------------------
+
+def multi_cycle(bss: Sequence[int], rates: Sequence[float]) -> float:
+    """Base interleaving cycle: the shortest stream batch period."""
+    return min(b / r for b, r in zip(bss, rates))
+
+
+def multi_slack(bss: Sequence[int], rates: Sequence[float],
+                t_ins: Sequence[float]) -> float:
+    """Idle time per base cycle once every stream is served at its rate."""
+    cycle = multi_cycle(bss, rates)
+    if len(bss) == 1:                      # the exact pair expression
+        return cycle - t_ins[0]
+    busy = 0.0
+    for b, r, t in zip(bss, rates, t_ins):
+        busy += t * (cycle * r / b)        # fractional batches per cycle
+    return cycle - busy
+
+
+def multi_blocking(t_ins: Sequence[float], i: int) -> float:
+    """Worst-case head-of-line blocking seen by stream ``i``: one batch of
+    every other tenant in service/queued ahead (total-minus-own form, so the
+    vectorized solver reproduces it exactly)."""
+    if len(t_ins) == 1:
+        return 0.0
+    total = 0.0
+    for t in t_ins:
+        total += t
+    return total - t_ins[i]
+
+
+def multi_peak_latency(bss, rates, t_ins, i: int) -> float:
+    """Stream ``i``'s peak latency: queueing + own service + blocking."""
+    lam = peak_latency(bss[i], rates[i], t_ins[i])
+    blk = multi_blocking(t_ins, i)
+    return lam if blk == 0.0 else lam + blk
+
+
+def multi_sustainable(bss, rates, t_ins) -> bool:
+    """Every stream keeps up on its own AND the joint schedule has
+    non-negative slack (a single device serves all streams)."""
+    for b, r, t in zip(bss, rates, t_ins):
+        if not sustainable(b, r, t):
+            return False
+    return len(bss) == 1 or multi_slack(bss, rates, t_ins) >= 0.0
+
+
+def multi_interleave_tau(bss, rates, t_ins, t_tr: float) -> int:
+    """Training minibatches per base cycle under N-stream interleaving."""
+    slack = multi_slack(bss, rates, t_ins)
+    return max(0, int(math.floor(slack / t_tr)))
 
 
 # ---------------------------------------------------------------------------
@@ -134,3 +302,89 @@ def solve_concurrent(problem: ConcurrentProblem, train_obs: dict,
         if best is None or (cand.throughput, -cand.time) > (best.throughput, -best.time):
             best = cand
     return best
+
+
+def _stream_candidates(obs: dict, spec: StreamSpec) -> dict:
+    """{pm: [(bs, t, p), ...]} in observation order, restricted to the
+    spec's allowed minibatch sizes."""
+    allowed = None if spec.batch_sizes is None else set(spec.batch_sizes)
+    out: dict = {}
+    for (pm, bs), (t, p) in obs.items():
+        if allowed is not None and bs not in allowed:
+            continue
+        out.setdefault(pm, []).append((bs, t, p))
+    return out
+
+
+def solve_multi_tenant(problem: MultiTenantProblem, train_obs: Optional[dict],
+                       infer_obs: Sequence[dict]) -> Optional[MultiTenantSolution]:
+    """Scalar reference for the N-stream problem: scan the cross-product of
+    per-stream (pm, bs) observations sharing one power mode. Primary
+    objective: training throughput (worst-tenant latency when no train);
+    secondary: min worst-tenant latency. With one stream this replays
+    ``solve_concurrent`` / ``solve_infer`` op-for-op (bitwise contract)."""
+    n = problem.n_streams
+    if len(infer_obs) != n:
+        raise ValueError(f"expected {n} observation sets, got {len(infer_obs)}")
+    rates = [s.arrival_rate for s in problem.streams]
+    spec0 = problem.streams[0]
+    allowed0 = None if spec0.batch_sizes is None else set(spec0.batch_sizes)
+    rest = [_stream_candidates(obs, s)
+            for obs, s in zip(infer_obs[1:], problem.streams[1:])]
+    best = None
+    best_key = None
+    # stream 0 scans its observations in dict order — with one stream this
+    # is solve_concurrent's/solve_infer's exact scan (and tie-break) order
+    for (pm, bs0), (t0, p0) in infer_obs[0].items():
+        if allowed0 is not None and bs0 not in allowed0:
+            continue
+        if problem.train and (train_obs is None or pm not in train_obs):
+            continue
+        per_stream = [c.get(pm) for c in rest]
+        if any(ps is None for ps in per_stream):
+            continue
+        t_tr = p_tr = None
+        if problem.train:
+            t_tr, p_tr = train_obs[pm]
+        for combo in _cross(per_stream):
+            bss = [bs0] + [c[0] for c in combo]
+            t_ins = [t0] + [c[1] for c in combo]
+            p = p0
+            for c in combo:
+                p = max(p, c[2])
+            if p_tr is not None:
+                p = max(p, p_tr)
+            if p > problem.power_budget:
+                continue
+            if not multi_sustainable(bss, rates, t_ins):
+                continue
+            lams = [multi_peak_latency(bss, rates, t_ins, i)
+                    for i in range(n)]
+            if any(lam > s.latency_budget
+                   for lam, s in zip(lams, problem.streams)):
+                continue
+            worst = max(lams)
+            if problem.train:
+                tau = multi_interleave_tau(bss, rates, t_ins, t_tr)
+                theta = tau / multi_cycle(bss, rates)
+                key = (theta, -worst)
+            else:
+                tau, theta = None, 0.0
+                key = (-worst,)
+            if best is None or key > best_key:
+                best = MultiTenantSolution(pm=pm, bss=tuple(bss), tau_tr=tau,
+                                           times=tuple(lams), power=p,
+                                           throughput=theta)
+                best_key = key
+    return best
+
+
+def _cross(per_stream):
+    """Cross product of per-stream candidate lists, earlier-stream-major
+    (the enumeration order the vectorized solver reproduces)."""
+    if not per_stream:
+        yield ()
+        return
+    for c in per_stream[0]:
+        for tail in _cross(per_stream[1:]):
+            yield (c,) + tail

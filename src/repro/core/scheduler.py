@@ -20,16 +20,20 @@ import enum
 from typing import Callable, Optional, Sequence
 
 from repro.core import problem as P
-from repro.core.als import ALSConcurrent, ALSInfer, ALSTrain, QuadrantRanges
+from repro.core.als import (ALSConcurrent, ALSInfer, ALSMultiTenant, ALSTrain,
+                            QuadrantRanges)
 from repro.core.baselines import (NNConcurrentBaseline, NNInferBaseline,
-                                  NNTrainBaseline, RNDConcurrent, RNDInfer,
+                                  NNMultiTenantBaseline, NNTrainBaseline,
+                                  RNDConcurrent, RNDInfer, RNDMultiTenant,
                                   RNDTrain)
 from repro.core.device_model import DeviceModel, Profiler, WorkloadProfile
-from repro.core.gmd import ConcurrentProfiler, GMDConcurrent, GMDInfer, GMDTrain
+from repro.core.gmd import (ConcurrentProfiler, GMDConcurrent, GMDInfer,
+                            GMDMultiTenant, GMDTrain, MultiTenantProfiler)
 from repro.core.interleave import ExecutionReport
 from repro.core.oracle import Oracle
 from repro.core.powermode import PowerModeSpace
-from repro.core.simulate import ArrivalTrace, simulate
+from repro.core.simulate import (ArrivalTrace, MultiTenantReport, simulate,
+                                 simulate_multi_tenant)
 
 
 class Scenario(enum.Enum):
@@ -38,6 +42,7 @@ class Scenario(enum.Enum):
     CONCURRENT = "concurrent"
     CONCURRENT_INFERENCE = "concurrent_inference"
     DYNAMIC = "dynamic"
+    MULTI_TENANT = "multi_tenant"
 
     @property
     def canonical(self) -> "Scenario":
@@ -137,6 +142,32 @@ register_strategy(Scenario.CONCURRENT, "nn250",
                       nn_epochs=f.nn_epochs))
 
 
+def _mtprof(f: "Fulcrum", w_tr: Optional[WorkloadProfile],
+            *stream_ws: WorkloadProfile) -> MultiTenantProfiler:
+    return MultiTenantProfiler(
+        Profiler(f.device, w_tr) if w_tr is not None else None,
+        [Profiler(f.device, w) for w in stream_ws])
+
+
+register_strategy(Scenario.MULTI_TENANT, "gmd",
+                  lambda f, w_tr, *ws: GMDMultiTenant(_mtprof(f, w_tr, *ws),
+                                                      f.space), cached=False)
+register_strategy(Scenario.MULTI_TENANT, "als145",
+                  lambda f, w_tr, *ws: ALSMultiTenant(
+                      _mtprof(f, w_tr, *ws), f.quadrants, f.space,
+                      nn_epochs=f.nn_epochs))
+register_strategy(Scenario.MULTI_TENANT, "rnd150",
+                  lambda f, w_tr, *ws: RNDMultiTenant(_mtprof(f, w_tr, *ws),
+                                                      150, f.space))
+register_strategy(Scenario.MULTI_TENANT, "rnd250",
+                  lambda f, w_tr, *ws: RNDMultiTenant(_mtprof(f, w_tr, *ws),
+                                                      250, f.space))
+register_strategy(Scenario.MULTI_TENANT, "nn250",
+                  lambda f, w_tr, *ws: NNMultiTenantBaseline(
+                      _mtprof(f, w_tr, *ws), 250, f.space,
+                      nn_epochs=f.nn_epochs))
+
+
 # ---------------------------------------------------------------------------
 # plans and per-window results
 # ---------------------------------------------------------------------------
@@ -152,11 +183,13 @@ class Plan:
 
 @dataclasses.dataclass
 class WindowReport:
-    """One §5.4 rate window: the rate, the (re)planned solution, and the
-    engine's execution report over that window's arrival trace."""
-    rate: float
-    solution: Optional[P.Solution]
-    report: Optional[ExecutionReport]
+    """One §5.4 rate window: the rate (a per-stream tuple for multi-tenant
+    windows), the (re)planned solution, and the engine's execution report
+    (a MultiTenantReport for multi-tenant windows) over that window's
+    arrival trace(s)."""
+    rate: object                      # float | tuple[float, ...]
+    solution: Optional[object]        # Solution | MultiTenantSolution
+    report: Optional[object]          # ExecutionReport | MultiTenantReport
 
 
 class Fulcrum:
@@ -203,6 +236,21 @@ class Fulcrum:
                           (as_nonurgent(w_nonurgent, nonurgent_bs), w_urgent),
                           prob, strategy)
 
+    def solve_multi_tenant(self, w_tr: Optional[WorkloadProfile],
+                           prob: P.MultiTenantProblem,
+                           strategy: str = "gmd") -> Optional[Plan]:
+        """N tenant inference streams + a training fill workload under one
+        power budget; stream workloads come from the problem's StreamSpecs.
+        The Plan's solution is a MultiTenantSolution (per-stream bs/latency)."""
+        ws = tuple(s.workload for s in prob.streams)
+        if any(w is None for w in ws):
+            raise ValueError("every StreamSpec needs a workload to solve a "
+                             "multi-tenant scenario")
+        if prob.train and w_tr is None:
+            raise ValueError("prob.train is set but no train workload given")
+        return self.solve(Scenario.MULTI_TENANT,
+                          (w_tr if prob.train else None,) + ws, prob, strategy)
+
     def strategy_for(self, scenario, name: str, *workloads: WorkloadProfile):
         """Resolve (scenario, strategy) through the registry; fitted
         strategies are cached per workload tuple, GMD never is."""
@@ -222,7 +270,7 @@ class Fulcrum:
         if not spec.cached:
             return spec.factory(self, *workloads)
         key = (scenario.canonical.value, name,
-               tuple(w.name for w in workloads))
+               tuple(w.name if w is not None else None for w in workloads))
         if key not in self._fitted:
             self._fitted[key] = spec.factory(self, *workloads)
         return self._fitted[key]
@@ -230,7 +278,8 @@ class Fulcrum:
     def _plan(self, sol, strat, name, scenario=None) -> Optional[Plan]:
         if sol is None:
             return None
-        prof = getattr(strat, "profiler", None) or getattr(strat, "cp", None)
+        prof = getattr(strat, "profiler", None) or getattr(strat, "cp", None) \
+            or getattr(strat, "mp", None)
         runs = prof.num_runs if prof is not None else 0
         cost = prof.profile_cost_s if prof is not None else 0.0
         return Plan(solution=sol, strategy=name, profiling_runs=runs,
@@ -257,6 +306,35 @@ class Fulcrum:
                 "solve an infer/concurrent scenario before executing")
         return simulate(self.device, w_tr, w_in, sol.pm, sol.bs, trace,
                         approach=approach, seed=seed, tau_cap=sol.tau_tr)
+
+    def execute_multi_tenant(self, plan: Plan, prob: P.MultiTenantProblem,
+                             w_tr: Optional[WorkloadProfile] = None,
+                             traces: Optional[Sequence[ArrivalTrace]] = None,
+                             duration: float = 120.0,
+                             arrivals: str = "uniform",
+                             seed: int = 0) -> MultiTenantReport:
+        """Execute a multi-tenant plan: per-stream minibatch sizes drive the
+        N-stream managed engine over one trace per tenant (built from each
+        stream's arrival rate unless given), slack-fill capped at tau_tr."""
+        sol = plan.solution
+        if not isinstance(sol, P.MultiTenantSolution):
+            raise ValueError(f"plan ({plan.strategy}) is not multi-tenant; "
+                             "use execute()")
+        if prob.train and w_tr is None:
+            raise ValueError("prob.train is set but no train workload given; "
+                             "executing without it would silently drop the "
+                             "plan's training fill")
+        specs = prob.streams
+        if traces is None:
+            traces = [ArrivalTrace.uniform(s.arrival_rate, duration)
+                      if arrivals == "uniform"
+                      else ArrivalTrace.poisson(s.arrival_rate, duration,
+                                                seed + j)
+                      for j, s in enumerate(specs)]
+        return simulate_multi_tenant(
+            self.device, w_tr if prob.train else None,
+            [s.workload for s in specs], sol.pm, sol.bss, traces,
+            tau_cap=sol.tau_tr)
 
     # -- dynamic arrival rates (§5.4): re-planning controller ----------------
     def solve_dynamic(self, w: WorkloadProfile, power_budget: float,
@@ -286,14 +364,62 @@ class Fulcrum:
             return list(strat.solve_batch(probs))
         return [strat.solve(prob) for prob in probs]
 
-    def serve_dynamic(self, w: WorkloadProfile, power_budget: float,
-                      latency_budget: float, rates: Sequence[float],
+    def solve_dynamic_multi_tenant(self, specs: Sequence[P.StreamSpec],
+                                   power_budget: float,
+                                   rate_windows: Sequence[Sequence[float]],
+                                   strategy: str = "gmd",
+                                   w_tr: Optional[WorkloadProfile] = None
+                                   ) -> list[Optional[P.MultiTenantSolution]]:
+        """Dynamic multi-tenant re-planning: one window per per-stream rate
+        vector. GMD shares one MultiTenantProfiler across windows (cached
+        profiles are free, as in solve_dynamic); fitted strategies answer
+        every window from one model."""
+        train = w_tr is not None
+        probs = [P.MultiTenantProblem(
+            power_budget,
+            tuple(s.with_rate(r) for s, r in zip(specs, rvec)), train=train)
+            for rvec in rate_windows]
+        for rvec in rate_windows:
+            if len(rvec) != len(specs):
+                raise ValueError("each rate window needs one rate per stream")
+        if strategy == "gmd":
+            mp = _mtprof(self, w_tr, *[s.workload for s in specs])
+            sols: list[Optional[P.MultiTenantSolution]] = []
+            for prob in probs:
+                tobs = mp.train.observed_modes() if mp.train else None
+                sol = P.solve_multi_tenant(prob, tobs, mp.infer_observed())
+                if sol is None:
+                    GMDMultiTenant(mp, self.space).solve(prob)
+                    tobs = mp.train.observed_modes() if mp.train else None
+                    sol = P.solve_multi_tenant(prob, tobs,
+                                               mp.infer_observed())
+                sols.append(sol)
+            return sols
+        strat = self._strategy(Scenario.MULTI_TENANT, strategy,
+                               w_tr if train else None,
+                               *[s.workload for s in specs])
+        return list(strat.solve_batch(probs))
+
+    def serve_dynamic(self, w, power_budget: float,
+                      latency_budget: Optional[float], rates: Sequence,
                       strategy: str = "gmd", window_duration: float = 30.0,
-                      arrivals: str = "uniform",
-                      seed: int = 0) -> list[WindowReport]:
+                      arrivals: str = "uniform", seed: int = 0,
+                      w_tr: Optional[WorkloadProfile] = None
+                      ) -> list[WindowReport]:
         """Solve and *execute* a dynamic trace: re-plan per rate window, then
         run the engine over each window's arrival trace (uniform ticks or
-        seeded Poisson), emitting one ExecutionReport per window."""
+        seeded Poisson), emitting one ExecutionReport per window.
+
+        Multi-tenant form: pass ``w`` as a sequence of StreamSpecs (their
+        latency budgets apply; ``latency_budget`` is ignored) and each entry
+        of ``rates`` as a per-stream rate vector; windows then re-plan the
+        N-stream problem and execute the merged trace, reporting one
+        MultiTenantReport per window."""
+        if isinstance(w, (list, tuple)) and w \
+                and isinstance(w[0], P.StreamSpec):
+            return self._serve_dynamic_multi(tuple(w), power_budget, rates,
+                                             strategy, window_duration,
+                                             arrivals, seed, w_tr)
         sols = self.solve_dynamic(w, power_budget, latency_budget, rates,
                                   strategy)
         out: list[WindowReport] = []
@@ -307,4 +433,24 @@ class Fulcrum:
                 rep = simulate(self.device, None, w, sol.pm, sol.bs, trace,
                                approach="managed", seed=seed + i)
             out.append(WindowReport(float(rate), sol, rep))
+        return out
+
+    def _serve_dynamic_multi(self, specs, power_budget, rate_windows,
+                             strategy, window_duration, arrivals, seed,
+                             w_tr) -> list[WindowReport]:
+        sols = self.solve_dynamic_multi_tenant(specs, power_budget,
+                                               rate_windows, strategy, w_tr)
+        out: list[WindowReport] = []
+        for i, (rvec, sol) in enumerate(zip(rate_windows, sols)):
+            rep = None
+            if sol is not None:
+                traces = [ArrivalTrace.uniform(r, window_duration)
+                          if arrivals == "uniform"
+                          else ArrivalTrace.poisson(r, window_duration,
+                                                    seed + i * 101 + j)
+                          for j, r in enumerate(rvec)]
+                rep = simulate_multi_tenant(
+                    self.device, w_tr, [s.workload for s in specs],
+                    sol.pm, sol.bss, traces, tau_cap=sol.tau_tr)
+            out.append(WindowReport(tuple(float(r) for r in rvec), sol, rep))
         return out

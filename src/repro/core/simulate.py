@@ -56,14 +56,21 @@ _MAX_EXACT_FILL = 2_000_000
 
 @dataclasses.dataclass(frozen=True, eq=False)
 class ArrivalTrace:
-    """Sorted request-arrival timestamps (seconds) driving one simulation."""
+    """Sorted request-arrival timestamps (seconds) driving one simulation.
+    ``stream_ids`` (multi-tenant traces) records which tenant each request
+    belongs to; ``merge``/``split`` round-trip that provenance."""
     times: np.ndarray
     duration: float
     kind: str = "uniform"
+    stream_ids: Optional[np.ndarray] = None
+    n_streams: Optional[int] = None   # tenant count of a merged trace
 
     def __post_init__(self):
         object.__setattr__(self, "times",
                            np.ascontiguousarray(self.times, np.float64))
+        if self.stream_ids is not None:
+            object.__setattr__(self, "stream_ids",
+                               np.ascontiguousarray(self.stream_ids, np.int64))
 
     def __len__(self) -> int:
         return int(self.times.size)
@@ -73,7 +80,36 @@ class ArrivalTrace:
         return len(self) / self.duration if self.duration > 0 else 0.0
 
     def shifted(self, t0: float) -> "ArrivalTrace":
-        return ArrivalTrace(self.times + t0, self.duration, self.kind)
+        return ArrivalTrace(self.times + t0, self.duration, self.kind,
+                            self.stream_ids, self.n_streams)
+
+    @staticmethod
+    def merge(traces: Sequence["ArrivalTrace"]) -> "ArrivalTrace":
+        """Merge per-stream traces into one multi-tenant trace. Stream ``j``
+        of the result is ``traces[j]``; arrival order is a stable sort on
+        time, so simultaneous arrivals keep stream order. ``split`` recovers
+        the per-stream traces (idle tenants included — the stream count is
+        recorded, not inferred from the ids)."""
+        if not traces:
+            return ArrivalTrace(np.empty(0), 0.0, "merged",
+                                np.empty(0, np.int64), 0)
+        times = np.concatenate([t.times for t in traces])
+        ids = np.concatenate([np.full(len(t), j, np.int64)
+                              for j, t in enumerate(traces)])
+        order = np.argsort(times, kind="stable")
+        duration = max(t.duration for t in traces)
+        return ArrivalTrace(times[order], float(duration), "merged",
+                            ids[order], len(traces))
+
+    def split(self, n_streams: Optional[int] = None) -> list["ArrivalTrace"]:
+        """Per-stream traces of a merged trace (provenance round-trip)."""
+        if self.stream_ids is None:
+            raise ValueError("trace has no stream provenance; use merge()")
+        n = n_streams if n_streams is not None else self.n_streams
+        if n is None:       # foreign ids without a recorded count: infer
+            n = int(self.stream_ids.max() + 1) if len(self) else 0
+        return [ArrivalTrace(self.times[self.stream_ids == j], self.duration,
+                             self.kind) for j in range(int(n))]
 
     @classmethod
     def uniform(cls, rate: float, duration: float) -> "ArrivalTrace":
@@ -158,12 +194,14 @@ def _batch_ready(times: np.ndarray, bs: int) -> np.ndarray:
     return times[bs - 1::bs]
 
 
-def _managed_completions(ready: np.ndarray, t_in: float) -> np.ndarray:
-    """Exact batch completion times for c_k = fl(max(c_{k-1}, ready_k) + t_in):
-    the vectorized no-backlog candidate everywhere, with backlogged runs
-    (candidate finishing after the next batch is ready) replayed by the
-    scalar recurrence — identical float ops, so bitwise-equal results."""
-    c = ready + t_in
+def _managed_completions_var(ready: np.ndarray,
+                             exec_t: np.ndarray) -> np.ndarray:
+    """Exact batch completion times for the per-event-service recurrence
+    c_k = fl(max(c_{k-1}, ready_k) + e_k): the vectorized no-backlog
+    candidate everywhere, with backlogged runs (candidate finishing after
+    the next batch is ready) replayed by the scalar recurrence — identical
+    float ops, so bitwise-equal results."""
+    c = ready + exec_t
     if c.size <= 1:
         return c
     bad = np.flatnonzero(c[:-1] > ready[1:])
@@ -172,12 +210,18 @@ def _managed_completions(ready: np.ndarray, t_in: float) -> np.ndarray:
         k = int(bad[i]) + 1
         prev = float(c[k - 1])
         while k < K and prev > ready[k]:
-            prev = prev + t_in
+            prev = prev + float(exec_t[k])
             c[k] = prev
             k += 1
         while i < bad.size and bad[i] < k:
             i += 1
     return c
+
+
+def _managed_completions(ready: np.ndarray, t_in: float) -> np.ndarray:
+    """Constant-service special case (the pair engine's kernel)."""
+    return _managed_completions_var(
+        ready, np.broadcast_to(np.float64(t_in), ready.shape))
 
 
 def _fill_count_exact(start: float, ready: float, t_tr: float) -> int:
@@ -320,6 +364,88 @@ ENGINES: dict[str, Callable[..., ExecutionReport]] = {
 }
 
 
+# ---------------------------------------------------------------------------
+# multi-tenant managed interleaving: N inference streams + training fill
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class MultiTenantReport:
+    """Per-tenant execution reports plus the shared training/power account
+    of one N-stream managed run."""
+    streams: list                     # one ExecutionReport per tenant
+    train_minibatches: int
+    duration: float
+    power: float
+    trace: Optional[ArrivalTrace] = None   # the merged trace that was run
+
+    @property
+    def train_throughput(self) -> float:
+        return self.train_minibatches / self.duration
+
+    def worst_latency_quantile(self, q: float) -> float:
+        return max((r.latency_quantile(q) for r in self.streams), default=0.0)
+
+    def violation_rates(self, budgets: Sequence[float]) -> list:
+        return [r.violation_rate(b) for r, b in zip(self.streams, budgets)]
+
+
+def _merge_events(traces: Sequence[ArrivalTrace], bss: Sequence[int],
+                  t_ins: Sequence[float]):
+    """Batch-ready events of all streams merged into device order: a stable
+    sort on ready time, ties by stream index (the scalar loop's order).
+    Returns (ready, exec_t, stream_of_event)."""
+    readies = [_batch_ready(tr.times, int(b)) for tr, b in zip(traces, bss)]
+    ready = np.concatenate(readies) if readies else np.empty(0)
+    sid = np.concatenate([np.full(r.size, j, np.int64)
+                          for j, r in enumerate(readies)]) \
+        if readies else np.empty(0, np.int64)
+    order = np.argsort(ready, kind="stable")
+    ready, sid = ready[order], sid[order]
+    exec_t = np.asarray(t_ins, np.float64)[sid] if ready.size \
+        else np.empty(0)
+    return ready, exec_t, sid
+
+
+def simulate_multi_tenant(device: DeviceModel,
+                          w_tr: Optional[WorkloadProfile],
+                          stream_workloads: Sequence[WorkloadProfile],
+                          pm: PowerMode, bss: Sequence[int],
+                          traces: Sequence[ArrivalTrace],
+                          tau_cap: Optional[int] = None) -> MultiTenantReport:
+    """N-stream managed interleaving on one device: streams' minibatches are
+    served in ready order (one DNN at a time), training fills the remaining
+    slack conservatively. With one stream this is exactly the pair managed
+    engine (and the seed scalar loop) — the engine's exactness contract."""
+    n = len(stream_workloads)
+    if not (len(bss) == len(traces) == n):
+        raise ValueError("stream workloads / batch sizes / traces must align")
+    tps = [_time_power(device, w, pm, int(b))
+           for w, b in zip(stream_workloads, bss)]
+    t_ins = [t for t, _ in tps]
+    t_tr, p_tr = _time_power(device, w_tr, pm, None) if w_tr \
+        else (float("inf"), 0.0)
+    ready, exec_t, sid = _merge_events(traces, bss, t_ins)
+    c = _managed_completions_var(ready, exec_t)
+    trained = 0
+    if w_tr:
+        fills = _fill_counts(ready, c, t_tr)
+        if tau_cap is not None:
+            fills = np.minimum(fills, max(0, int(tau_cap)))
+        trained = int(fills.sum())
+    power = p_tr if trained else 0.0
+    for _, p_in in tps:
+        power = max(power, p_in)
+    duration = max((tr.duration for tr in traces), default=0.0)
+    reports = []
+    for j, (tr, b) in enumerate(zip(traces, bss)):
+        comp_j = c[sid == j]
+        lat = np.repeat(comp_j, int(b)) - tr.times[:comp_j.size * int(b)]
+        reports.append(ExecutionReport("managed", lat, 0, tr.duration,
+                                       power, tr))
+    return MultiTenantReport(reports, trained, duration, power,
+                             ArrivalTrace.merge(traces))
+
+
 def simulate(device: DeviceModel, w_tr: Optional[WorkloadProfile],
              w_in: WorkloadProfile, pm: PowerMode, bs: int,
              trace: ArrivalTrace, approach: str = "managed", seed: int = 0,
@@ -363,6 +489,47 @@ def managed_scalar(device: DeviceModel, w_tr: Optional[WorkloadProfile],
     power = max(p_in, p_tr if trained else 0.0)
     return ExecutionReport("managed", latencies, trained, trace.duration,
                            power, trace)
+
+
+def multi_tenant_scalar(device: DeviceModel, w_tr: Optional[WorkloadProfile],
+                        stream_workloads: Sequence[WorkloadProfile],
+                        pm: PowerMode, bss: Sequence[int],
+                        traces: Sequence[ArrivalTrace],
+                        tau_cap: Optional[int] = None) -> MultiTenantReport:
+    """Scalar reference for the N-stream managed engine: replay every
+    batch-ready event in (time, stream) order with the seed loop's float
+    ops. One stream degenerates to ``managed_scalar``."""
+    tps = [device.time_power(w, pm, int(b))
+           for w, b in zip(stream_workloads, bss)]
+    t_tr, p_tr = device.time_power(w_tr, pm) if w_tr else (float("inf"), 0.0)
+    arrivals = [tr.times.tolist() for tr in traces]
+    events = []
+    for j, (arr, b) in enumerate(zip(arrivals, bss)):
+        b = int(b)
+        for k in range(len(arr) // b):
+            events.append((arr[k * b + b - 1], j, k * b))
+    events.sort()
+    latencies: list[list[float]] = [[] for _ in stream_workloads]
+    now, trained = 0.0, 0
+    for ready, j, start in events:
+        filled = 0
+        while w_tr and now + t_tr <= ready \
+                and (tau_cap is None or filled < tau_cap):
+            now += t_tr
+            trained += 1
+            filled += 1
+        now = max(now, ready)
+        now += tps[j][0]
+        latencies[j].extend(now - arrivals[j][i]
+                            for i in range(start, start + int(bss[j])))
+    power = p_tr if trained else 0.0
+    for _, p_in in tps:
+        power = max(power, p_in)
+    duration = max((tr.duration for tr in traces), default=0.0)
+    reports = [ExecutionReport("managed", lat, 0, tr.duration, power, tr)
+               for lat, tr in zip(latencies, traces)]
+    return MultiTenantReport(reports, trained, duration, power,
+                             ArrivalTrace.merge(traces))
 
 
 def native_scalar(device: DeviceModel, w_tr: WorkloadProfile,

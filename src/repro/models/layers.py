@@ -363,9 +363,15 @@ def moe_init(key, spec: MoeSpec) -> Params:
 def moe_apply(p: Params, x: jax.Array, spec: MoeSpec) -> tuple[jax.Array, jax.Array]:
     """Returns (y, aux_loss). x: (B, S, d)."""
     b, s, d = x.shape
-    tokens = b * s
-    g = max(1, tokens // spec.group_size) if tokens >= spec.group_size else 1
-    t = tokens // g
+    # Dispatch groups never span batch rows: capacity-queue positions come
+    # from a cumsum over the group, so mixing rows would make one sequence's
+    # drops depend on another's tokens (and break prefill/decode parity,
+    # where row lengths shift between calls).
+    g_row = max(1, s // spec.group_size) if s >= spec.group_size else 1
+    while s % g_row:                  # largest divisor of s, so the reshape
+        g_row -= 1                    # is exact for any sequence length
+    g = b * g_row
+    t = s // g_row
     xg = x.reshape(g, t, d)
 
     logits = jnp.einsum("gtd,de->gte", xg.astype(jnp.float32), p["router"])

@@ -169,6 +169,100 @@ def test_execute_requires_rate_or_trace():
         f.execute(plan, w)
 
 
+# ---------------------------------------------------------------------------
+# multi-tenant scenario (N streams + training under one budget)
+# ---------------------------------------------------------------------------
+
+def _specs(n=2):
+    pool = [("mobilenet", 40.0, 1.0), ("lstm", 50.0, 0.6),
+            ("resnet50", 25.0, 1.2), ("yolov8n", 20.0, 1.5)]
+    return tuple(P.StreamSpec(r, l, INFER_WORKLOADS[w])
+                 for w, r, l in pool[:n])
+
+
+def test_multi_tenant_scenario_registered():
+    assert Scenario.MULTI_TENANT.canonical is Scenario.MULTI_TENANT
+    assert "gmd" in available_strategies(Scenario.MULTI_TENANT)
+    assert "rnd150" in available_strategies(Scenario.MULTI_TENANT)
+
+
+def test_solve_multi_tenant_gmd_plan_respects_budgets():
+    f = Fulcrum(DEV)
+    w_tr = TRAIN_WORKLOADS["resnet18"]
+    prob = P.MultiTenantProblem(45.0, _specs(3))
+    plan = f.solve_multi_tenant(w_tr, prob, "gmd")
+    assert plan is not None and plan.scenario is Scenario.MULTI_TENANT
+    sol = plan.solution
+    assert len(sol.bss) == 3 and len(sol.times) == 3
+    assert sol.power <= prob.power_budget + 1e-9
+    for lam, spec in zip(sol.times, prob.streams):
+        assert lam <= spec.latency_budget + 1e-9
+    rep = f.execute_multi_tenant(plan, prob, w_tr, duration=20.0)
+    assert len(rep.streams) == 3
+    assert rep.power <= prob.power_budget + 1e-9
+    # the plan's per-tenant guarantee holds under the planned uniform rates
+    for v in rep.violation_rates([s.latency_budget for s in prob.streams]):
+        assert v == 0.0
+
+
+def test_solve_multi_tenant_requires_workloads():
+    f = Fulcrum(DEV)
+    prob = P.MultiTenantProblem(40.0, (P.StreamSpec(40.0, 1.0),))
+    with pytest.raises(ValueError, match="workload"):
+        f.solve_multi_tenant(TRAIN_WORKLOADS["lstm"], prob, "gmd")
+
+
+def test_multi_tenant_fitted_strategy_cached():
+    f = Fulcrum(DEV)
+    w_tr = TRAIN_WORKLOADS["mobilenet"]
+    specs = _specs(2)
+    prob = P.MultiTenantProblem(40.0, specs)
+    p1 = f.solve_multi_tenant(w_tr, prob, "rnd150")
+    p2 = f.solve_multi_tenant(w_tr, P.MultiTenantProblem(30.0, specs),
+                              "rnd150")
+    assert p1 is not None and p2 is not None
+    assert p2.profiling_runs == p1.profiling_runs   # no re-profiling
+    assert len(f._fitted) == 1
+
+
+def test_serve_dynamic_per_stream_rate_windows():
+    f = Fulcrum(DEV)
+    w_tr = TRAIN_WORKLOADS["mobilenet"]
+    specs = _specs(2)
+    windows = [(40.0, 50.0), (60.0, 30.0), (20.0, 70.0)]
+    reports = f.serve_dynamic(specs, 40.0, None, windows, "gmd",
+                              window_duration=10.0, w_tr=w_tr)
+    assert len(reports) == len(windows)
+    for wr, rvec in zip(reports, windows):
+        assert wr.rate == rvec
+        assert wr.solution is not None and wr.report is not None
+        assert len(wr.report.streams) == 2
+        for v in wr.report.violation_rates(
+                [s.latency_budget for s in specs]):
+            assert v == 0.0
+        assert wr.report.trace.kind == "merged"
+
+
+def test_execute_multi_tenant_rejects_pair_plan():
+    f = Fulcrum(DEV)
+    w_in = INFER_WORKLOADS["mobilenet"]
+    plan = f.solve_infer(w_in, P.InferProblem(40.0, 0.5, 60.0), "gmd")
+    prob = P.MultiTenantProblem(40.0, _specs(1))
+    with pytest.raises(ValueError, match="not multi-tenant"):
+        f.execute_multi_tenant(plan, prob, TRAIN_WORKLOADS["mobilenet"])
+
+
+def test_execute_multi_tenant_requires_train_workload():
+    """A train=True plan executed without w_tr would silently drop the
+    training fill (zero minibatches, under-reported power) — must raise."""
+    f = Fulcrum(DEV)
+    w_tr = TRAIN_WORKLOADS["mobilenet"]
+    prob = P.MultiTenantProblem(40.0, _specs(2))
+    plan = f.solve_multi_tenant(w_tr, prob, "gmd")
+    with pytest.raises(ValueError, match="train workload"):
+        f.execute_multi_tenant(plan, prob)
+
+
 def test_concurrent_inference_scenario_and_nonurgent_cast():
     f = Fulcrum(DEV)
     urgent = INFER_WORKLOADS["mobilenet"]
