@@ -1,17 +1,24 @@
 """Execution-engine microbenchmark: the vectorized trace-driven simulators
 (core.simulate) vs the seed's scalar per-request loops, over the *full*
-Fig. 2 interleaving sweep (10 GMD-planned configs x 3 approaches at 120 s).
+Fig. 2 interleaving sweep (10 GMD-planned configs x 3 approaches at 120 s),
+plus the NumPy-vs-jax *engine backend* comparison: the same managed sweep
+run lane-by-lane on NumPy vs as one batched max-plus-scan program on jax.
 
 The managed outputs of both paths are asserted identical before timing (the
-engine's exactness contract); the speedup is printed as CSV rows and
-snapshotted to ``benchmarks/results/BENCH_interleave.json`` so it is tracked
-across PRs, mirroring bench_solver's BENCH_solver.json."""
+engine's exactness contract); the jax engine is cross-checked against NumPy
+within the documented tolerance (atol=1e-8 s, rtol=1e-9 — see
+``docs/exactness.md``). Speedups are printed as CSV rows and snapshotted to
+``benchmarks/results/BENCH_interleave.json`` so they are tracked across PRs,
+mirroring bench_solver's BENCH_solver.json."""
 from __future__ import annotations
 
 import time
 from pathlib import Path
 
+import numpy as np
+
 from repro.core import simulate as S
+from repro.core.backend import jax_available
 
 from benchmarks.bench_interleaving import solve_configs
 from benchmarks.common import DEV, row, snapshot
@@ -78,6 +85,36 @@ def run(full: bool = False) -> list[str]:
                     results["speedup"],
                     f"requests={results['requests_total']};"
                     f"configs={len(solved)}x3"))
+
+    # -- engine backends: NumPy lane loop vs one batched jax scan program ----
+    if jax_available():
+        pms = [p.pm for _, p, _ in solved]
+        bss = [p.bs for _, p, _ in solved]
+        traces = [t for _, _, t in solved]
+        args = (DEV, w_tr, w_in, pms, bss, traces)
+        ref = S.simulate_batch(*args, backend="numpy")
+        got = S.simulate_batch(*args, backend="jax")   # also warms the jit
+        for a, b in zip(ref, got):
+            np.testing.assert_allclose(b.latencies, a.latencies,
+                                       rtol=1e-9, atol=1e-8,
+                                       err_msg="jax engine out of tolerance")
+            assert abs(a.train_minibatches - b.train_minibatches) <= 2
+        numpy_s = _time([(lambda: S.simulate_batch(*args, backend="numpy"),
+                          ())], repeats)
+        jax_s = _time([(lambda: S.simulate_batch(*args, backend="jax"),
+                        ())], repeats)
+        results["engine_backends"] = {
+            "configs": len(solved), "numpy_s": numpy_s, "jax_s": jax_s,
+            "speedup": numpy_s / jax_s,
+            "max_abs_latency_diff": max(
+                float(np.abs(np.asarray(b.latencies)
+                             - np.asarray(a.latencies)).max(initial=0.0))
+                for a, b in zip(ref, got))}
+        rows.append(row("interleave_engine/managed_batch/jax_vs_numpy",
+                        numpy_s / jax_s,
+                        f"numpy={numpy_s*1e3:.1f}ms;jax={jax_s*1e3:.1f}ms;"
+                        f"n={len(solved)}"))
+
     snapshot(SNAPSHOT, results, configs=len(solved) * 3)
     return rows
 

@@ -6,15 +6,20 @@ Per combination: the oracle solves the whole problem grid with the batched
 multi-tenant grid solver on the NumPy *and* jax backends (both timed, results
 cross-checked), GMD plans the median solvable problem, and the N-stream
 managed engine executes it — per-tenant violation rates and training
-throughput are reported. Rows are printed as CSV and snapshotted to
-``benchmarks/results/BENCH_multi_tenant.json``.
+throughput are reported. The executed plan is replayed on both *engine*
+backends too (NumPy reference vs the jax max-plus scan) and cross-checked
+within the documented tolerance (``docs/exactness.md``). Rows are printed as
+CSV and snapshotted to ``benchmarks/results/BENCH_multi_tenant.json``.
 """
 from __future__ import annotations
 
 import time
 from pathlib import Path
 
+import numpy as np
+
 from repro.core import problem as P
+from repro.core.backend import jax_available
 from repro.core.device_model import INFER_WORKLOADS, TRAIN_WORKLOADS
 from repro.core.scheduler import Fulcrum
 
@@ -117,6 +122,24 @@ def run(full: bool = False) -> list[str]:
                         "profiling_runs": plan.profiling_runs}
                     rep = f.execute_multi_tenant(plan, prob, w_tr,
                                                  duration=30.0)
+                    if jax_available():
+                        # engine-backend cross-check: jax scan vs reference
+                        rj = f.execute_multi_tenant(plan, prob, w_tr,
+                                                    duration=30.0,
+                                                    backend="jax")
+                        diff = 0.0
+                        for ra, rb in zip(rep.streams, rj.streams):
+                            np.testing.assert_allclose(
+                                rb.latencies, ra.latencies,
+                                rtol=1e-9, atol=1e-8,
+                                err_msg="jax engine out of tolerance")
+                            if len(ra.latencies):
+                                diff = max(diff, float(np.abs(
+                                    np.asarray(rb.latencies)
+                                    - np.asarray(ra.latencies)).max()))
+                        assert abs(rep.train_minibatches
+                                   - rj.train_minibatches) <= 2
+                        rec["engine_backend_max_abs_diff"] = diff
                     viols = rep.violation_rates(
                         [s.latency_budget for s in prob.streams])
                     rec["executed"] = {

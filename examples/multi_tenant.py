@@ -9,11 +9,17 @@ edge accelerator with a training job under a single power budget.
     throughput.
 
 Run: PYTHONPATH=src python examples/multi_tenant.py \
-         [--power-budget 45 --duration 60 --arrivals poisson]
+         [--power-budget 45 --duration 60 --arrivals poisson --backend jax]
+
+The ``--backend`` flag picks the execution-engine implementation (NumPy
+reference or the jax max-plus scan), so this example doubles as a smoke test
+for the on-accelerator engine path; the backend that actually ran is printed
+with the execution report.
 """
 import argparse
 
 from repro.core import problem as P
+from repro.core.backend import resolve_backend
 from repro.core.device_model import (DeviceModel, INFER_WORKLOADS,
                                      TRAIN_WORKLOADS)
 from repro.core.scheduler import Fulcrum
@@ -35,7 +41,11 @@ def main() -> None:
     ap.add_argument("--arrivals", default="poisson",
                     choices=["uniform", "poisson"])
     ap.add_argument("--strategy", default="gmd")
+    ap.add_argument("--backend", default=None, choices=["numpy", "jax"],
+                    help="execution-engine backend (default: resolve via "
+                         "FULCRUM_ENGINE_BACKEND, falling back to numpy)")
     args = ap.parse_args()
+    backend = resolve_backend(args.backend)
 
     dev = DeviceModel()
     w_tr = TRAIN_WORKLOADS[args.train]
@@ -59,9 +69,10 @@ def main() -> None:
           f"{s.throughput:.2f} minibatches/s planned")
 
     rep = f.execute_multi_tenant(plan, prob, w_tr, duration=args.duration,
-                                 arrivals=args.arrivals)
+                                 arrivals=args.arrivals, backend=backend)
     print(f"\nexecuted {args.duration:.0f} s of {args.arrivals} arrivals "
-          f"({len(rep.trace)} requests merged across {len(specs)} tenants):")
+          f"({len(rep.trace)} requests merged across {len(specs)} tenants) "
+          f"on the {backend} engine backend:")
     viols = rep.violation_rates([sp.latency_budget for sp in specs])
     for (name, _, lat), r, v in zip(TENANTS, rep.streams, viols):
         print(f"  {name:<10} served {len(r.latencies):>5} reqs  "

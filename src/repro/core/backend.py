@@ -1,0 +1,84 @@
+"""Shared NumPy/jax backend plumbing for the batched engines.
+
+Both vectorized layers — the grid-evaluation solvers (``core.grid_eval``) and
+the trace-driven execution engine (``core.simulate``) — expose the same two
+backends: ``"numpy"`` (the reference implementation, always available) and
+``"jax"`` (jit + vmap, runs on-accelerator). This module centralizes the
+selection rules so every entry point behaves identically:
+
+ * ``check_backend``   — validate an explicit backend name.
+ * ``jax_available``   — cached import probe; monkeypatchable in tests.
+ * ``resolve_backend`` — map a request (``None`` / ``"numpy"`` / ``"jax"``)
+   to the backend that will actually run. ``None`` defers to the
+   ``FULCRUM_ENGINE_BACKEND`` environment variable and **defaults to NumPy**;
+   an env-var ``jax`` request silently falls back to NumPy when jax is
+   missing (the default path must never fail), while an *explicit*
+   ``backend="jax"`` argument raises, so a caller that asked for the
+   accelerator is told it is absent.
+ * ``require_jax``     — the lazy jax import used by both jax kernels, with
+   one shared error message.
+
+The reference-backend invariant (NumPy results are authoritative; jax is
+cross-checked against them) is documented in ``docs/exactness.md``.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+#: Environment variable consulted when no explicit backend is requested.
+ENGINE_BACKEND_ENV = "FULCRUM_ENGINE_BACKEND"
+
+_JAX_OK: Optional[bool] = None      # memoized import probe (tests patch this)
+
+_JAX_MISSING_MSG = ("backend='jax' requires jax; "
+                    "use the default NumPy backend")
+
+
+def jax_available() -> bool:
+    """True when jax imports; probed once and memoized."""
+    global _JAX_OK
+    if _JAX_OK is None:
+        try:
+            import jax  # noqa: F401
+            _JAX_OK = True
+        except Exception:
+            _JAX_OK = False
+    return _JAX_OK
+
+
+def check_backend(backend: str) -> None:
+    if backend not in ("numpy", "jax"):
+        raise ValueError(f"unknown backend {backend!r}; use 'numpy' or 'jax'")
+
+
+def resolve_backend(backend: Optional[str] = None,
+                    env: str = ENGINE_BACKEND_ENV) -> str:
+    """Resolve a backend request to the backend that will run.
+
+    ``None`` reads ``env`` (default ``"numpy"``, the bitwise/exact reference)
+    and degrades an env-level ``jax`` request to ``"numpy"`` when jax is
+    unavailable. An explicit ``"jax"`` argument raises ``RuntimeError``
+    instead of degrading.
+    """
+    defaulted = backend is None
+    if defaulted:
+        backend = os.environ.get(env, "").strip().lower() or "numpy"
+    check_backend(backend)
+    if backend == "jax" and not jax_available():
+        if defaulted:
+            return "numpy"
+        raise RuntimeError(_JAX_MISSING_MSG)
+    return backend
+
+
+def require_jax():
+    """Import (jax, jax.numpy, enable_x64), raising the shared message when
+    jax is absent. Both kernel caches build through this."""
+    try:
+        import jax
+        import jax.numpy as jnp
+        from jax.experimental import enable_x64
+    except Exception as e:  # pragma: no cover - jax is baked into the image
+        raise RuntimeError(_JAX_MISSING_MSG) from e
+    return jax, jnp, enable_x64

@@ -22,12 +22,17 @@ This module replaces both hot paths with dense array programs:
    reduction on-accelerator.
 
 Exactness contract: the NumPy path is **bitwise identical** to the scalar
-reference. The tensors replay the exact IEEE-754 expression tree of
+reference — it is the authoritative backend this module is judged against.
+The tensors replay the exact IEEE-754 expression tree of
 ``DeviceModel.time_power`` elementwise, flattening in observation-dict
 iteration order, and the reductions reproduce the scalar loops'
 first-strict-improvement rule (NumPy's argmin/argmax return the first
 occurrence of the extremum). ``tests/test_grid_eval.py`` enforces this
-against randomized grids and the full 441 x 5 sweep.
+against randomized grids and the full 441 x 5 sweep. The jax backend runs
+the same reductions under ``enable_x64`` (masked argmin/argmax are
+reassociation-free, so it stays bitwise-equal too — unlike the execution
+engine's scan, see ``docs/exactness.md``). Backend names are validated by
+the shared ``core.backend`` plumbing, also used by ``core.simulate``.
 """
 from __future__ import annotations
 
@@ -36,6 +41,7 @@ from typing import Optional, Sequence, Union
 import numpy as np
 
 from repro.core import problem as P
+from repro.core.backend import check_backend, require_jax
 from repro.core.device_model import (MAX_CORES, MAX_CPUF, MAX_GPUF, MAX_MEMF,
                                      DeviceModel, WorkloadProfile, _pert)
 from repro.core.powermode import PowerMode, PowerModeSpace
@@ -241,11 +247,6 @@ def materialize(device: DeviceModel, w: WorkloadProfile, space: PowerModeSpace,
 # batched solvers (NumPy baseline)
 # ---------------------------------------------------------------------------
 
-def _check_backend(backend: str) -> None:
-    if backend not in ("numpy", "jax"):
-        raise ValueError(f"unknown backend {backend!r}; use 'numpy' or 'jax'")
-
-
 def _chunks(n_problems: int, n_obs: int):
     step = max(1, CHUNK_ELEMS // max(n_obs, 1))
     for s in range(0, n_problems, step):
@@ -287,7 +288,7 @@ def solve_train_batch(problems: Sequence[P.TrainProblem],
     """Batched ``problem.solve_train``: argmax theta_tr s.t. p <= p-hat for
     every problem at once. Returns one Optional[Solution] per problem,
     bitwise identical to the scalar loop."""
-    _check_backend(backend)
+    check_backend(backend)
     grid = as_train_grid(obs)
     out: list[Optional[P.Solution]] = [None] * len(problems)
     if not len(grid) or not len(problems):
@@ -322,7 +323,7 @@ def solve_infer_batch(problems: Sequence[P.InferProblem],
                       backend: str = "numpy") -> list[Optional[P.Solution]]:
     """Batched ``problem.solve_infer``: argmin peak latency s.t. power,
     latency, and sustainability constraints, over a batch of problems."""
-    _check_backend(backend)
+    check_backend(backend)
     grid = as_infer_grid(obs)
     out: list[Optional[P.Solution]] = [None] * len(problems)
     if not len(grid) or not len(problems):
@@ -390,7 +391,7 @@ def solve_concurrent_batch(problems: Sequence[P.ConcurrentProblem],
     """Batched ``problem.solve_concurrent``: lexicographic argmax of
     (training throughput, -peak latency) under the interleaving feasibility
     mask, for every problem at once."""
-    _check_backend(backend)
+    check_backend(backend)
     tg = as_train_grid(train_obs)
     ig = as_infer_grid(infer_obs)
     out: list[Optional[P.Solution]] = [None] * len(problems)
@@ -583,7 +584,7 @@ def solve_multi_tenant_batch(problems: Sequence["P.MultiTenantProblem"],
     """Batched ``problem.solve_multi_tenant``: every problem must share the
     stream count, train flag, and per-stream batch-size restrictions; rates,
     latency budgets, and power budgets vary per problem."""
-    _check_backend(backend)
+    check_backend(backend)
     out: list[Optional[P.MultiTenantSolution]] = [None] * len(problems)
     if not len(problems):
         return out
@@ -672,13 +673,7 @@ _JAX_CACHE: dict = {}
 def _jax_kernels() -> dict:
     if _JAX_CACHE:
         return _JAX_CACHE
-    try:
-        import jax
-        import jax.numpy as jnp
-        from jax.experimental import enable_x64
-    except Exception as e:  # pragma: no cover - jax is baked into the image
-        raise RuntimeError(
-            "backend='jax' requires jax; use the default NumPy backend") from e
+    jax, jnp, enable_x64 = require_jax()
 
     @jax.jit
     def train_kernel(t, p, budgets):

@@ -11,6 +11,16 @@ with an optional training fill workload. ``ConcurrentProblem`` and
 ``InferProblem`` are the N=1 views of it: ``as_multi_tenant()`` lifts them,
 and the N=1 multi-tenant math replays the pair expressions bitwise (the
 exactness contract enforced by ``tests/test_multi_tenant.py``).
+
+Contract: this module is the **scalar reference** for the whole solver layer.
+Inputs are problem dataclasses plus observation dicts ``{pm: (t, p)}`` /
+``{(pm, bs): (t, p)}`` whose iteration order is authoritative (ties resolve
+to the first-scanned entry); no randomness, no NumPy — pure-Python float
+ops define the IEEE-754 expression trees that ``core.grid_eval`` must replay
+bitwise. Invariants: solvers never mutate their inputs; a returned solution
+is always feasible under the problem's budgets and the sustainability/
+blocking math defined here; infeasible problems return ``None``. See
+``docs/architecture.md`` for where this layer sits.
 """
 from __future__ import annotations
 

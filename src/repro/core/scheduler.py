@@ -12,6 +12,15 @@ through a re-planning controller: per-window solutions reuse the profiler
 cache (GMD) or the fitted model (everything else), and ``serve_dynamic``
 executes each window over its arrival trace, emitting per-window
 ``ExecutionReport``s.
+
+Contract: inputs are workload profiles + problem dataclasses; outputs are
+``Plan``s (committed solutions with profiling cost attached) and engine
+reports. Invariants: solving never executes and executing never re-solves —
+``execute*`` replays exactly the committed plan (pm, bs, tau_tr cap) through
+``core.simulate``; the engine ``backend`` argument (NumPy reference / jax
+scan, resolved by ``core.backend``) changes *where* the replay runs, never
+*what* plan runs. Registry entries must be pure factories: strategy state
+lives in the returned object, so cached reuse is safe per workload tuple.
 """
 from __future__ import annotations
 
@@ -33,7 +42,8 @@ from repro.core.interleave import ExecutionReport
 from repro.core.oracle import Oracle
 from repro.core.powermode import PowerModeSpace
 from repro.core.simulate import (ArrivalTrace, MultiTenantReport, simulate,
-                                 simulate_multi_tenant)
+                                 simulate_batch, simulate_multi_tenant,
+                                 simulate_multi_tenant_batch)
 
 
 class Scenario(enum.Enum):
@@ -291,10 +301,13 @@ class Fulcrum:
                 arrival_rate: Optional[float] = None,
                 duration: float = 120.0,
                 trace: Optional[ArrivalTrace] = None,
-                approach: str = "managed", seed: int = 0) -> ExecutionReport:
+                approach: str = "managed", seed: int = 0,
+                backend: Optional[str] = None) -> ExecutionReport:
         """Execute a solved plan: the plan's power mode and minibatch size
         drive the engine, managed slack-fill is capped at the committed
-        tau_tr, and the returned report carries the trace that was run."""
+        tau_tr, and the returned report carries the trace that was run.
+        ``backend`` selects the engine implementation (NumPy reference or
+        the jax max-plus scan), as in ``core.simulate.simulate``."""
         if trace is None:
             if arrival_rate is None:
                 raise ValueError("execute() needs an arrival_rate or a trace")
@@ -305,14 +318,17 @@ class Fulcrum:
                 f"plan ({plan.strategy}) has no inference minibatch size; "
                 "solve an infer/concurrent scenario before executing")
         return simulate(self.device, w_tr, w_in, sol.pm, sol.bs, trace,
-                        approach=approach, seed=seed, tau_cap=sol.tau_tr)
+                        approach=approach, seed=seed, tau_cap=sol.tau_tr,
+                        backend=backend)
 
     def execute_multi_tenant(self, plan: Plan, prob: P.MultiTenantProblem,
                              w_tr: Optional[WorkloadProfile] = None,
                              traces: Optional[Sequence[ArrivalTrace]] = None,
                              duration: float = 120.0,
                              arrivals: str = "uniform",
-                             seed: int = 0) -> MultiTenantReport:
+                             seed: int = 0,
+                             backend: Optional[str] = None
+                             ) -> MultiTenantReport:
         """Execute a multi-tenant plan: per-stream minibatch sizes drive the
         N-stream managed engine over one trace per tenant (built from each
         stream's arrival rate unless given), slack-fill capped at tau_tr."""
@@ -334,7 +350,7 @@ class Fulcrum:
         return simulate_multi_tenant(
             self.device, w_tr if prob.train else None,
             [s.workload for s in specs], sol.pm, sol.bss, traces,
-            tau_cap=sol.tau_tr)
+            tau_cap=sol.tau_tr, backend=backend)
 
     # -- dynamic arrival rates (§5.4): re-planning controller ----------------
     def solve_dynamic(self, w: WorkloadProfile, power_budget: float,
@@ -404,11 +420,13 @@ class Fulcrum:
                       latency_budget: Optional[float], rates: Sequence,
                       strategy: str = "gmd", window_duration: float = 30.0,
                       arrivals: str = "uniform", seed: int = 0,
-                      w_tr: Optional[WorkloadProfile] = None
-                      ) -> list[WindowReport]:
+                      w_tr: Optional[WorkloadProfile] = None,
+                      backend: Optional[str] = None) -> list[WindowReport]:
         """Solve and *execute* a dynamic trace: re-plan per rate window, then
         run the engine over each window's arrival trace (uniform ticks or
-        seeded Poisson), emitting one ExecutionReport per window.
+        seeded Poisson), emitting one ExecutionReport per window. On
+        ``backend="jax"`` every solved window's replay runs as one batched
+        max-plus-scan program (one lane per window).
 
         Multi-tenant form: pass ``w`` as a sequence of StreamSpecs (their
         latency budgets apply; ``latency_budget`` is ignored) and each entry
@@ -419,38 +437,46 @@ class Fulcrum:
                 and isinstance(w[0], P.StreamSpec):
             return self._serve_dynamic_multi(tuple(w), power_budget, rates,
                                              strategy, window_duration,
-                                             arrivals, seed, w_tr)
+                                             arrivals, seed, w_tr, backend)
         sols = self.solve_dynamic(w, power_budget, latency_budget, rates,
                                   strategy)
-        out: list[WindowReport] = []
+        lanes = []       # solved windows, executed as one engine batch
         for i, (rate, sol) in enumerate(zip(rates, sols)):
-            rep = None
             if sol is not None:
                 trace = (ArrivalTrace.uniform(rate, window_duration)
                          if arrivals == "uniform"
                          else ArrivalTrace.poisson(rate, window_duration,
                                                    seed + i))
-                rep = simulate(self.device, None, w, sol.pm, sol.bs, trace,
-                               approach="managed", seed=seed + i)
-            out.append(WindowReport(float(rate), sol, rep))
-        return out
+                lanes.append((i, sol, trace))
+        reps = simulate_batch(self.device, None, w,
+                              [sol.pm for _, sol, _ in lanes],
+                              [sol.bs for _, sol, _ in lanes],
+                              [tr for _, _, tr in lanes], backend=backend)
+        by_window = {i: rep for (i, _, _), rep in zip(lanes, reps)}
+        return [WindowReport(float(rate), sol, by_window.get(i))
+                for i, (rate, sol) in enumerate(zip(rates, sols))]
 
     def _serve_dynamic_multi(self, specs, power_budget, rate_windows,
                              strategy, window_duration, arrivals, seed,
-                             w_tr) -> list[WindowReport]:
+                             w_tr, backend=None) -> list[WindowReport]:
         sols = self.solve_dynamic_multi_tenant(specs, power_budget,
                                                rate_windows, strategy, w_tr)
-        out: list[WindowReport] = []
+        lanes = []
         for i, (rvec, sol) in enumerate(zip(rate_windows, sols)):
-            rep = None
             if sol is not None:
                 traces = [ArrivalTrace.uniform(r, window_duration)
                           if arrivals == "uniform"
                           else ArrivalTrace.poisson(r, window_duration,
                                                     seed + i * 101 + j)
                           for j, r in enumerate(rvec)]
-                rep = simulate_multi_tenant(
-                    self.device, w_tr, [s.workload for s in specs],
-                    sol.pm, sol.bss, traces, tau_cap=sol.tau_tr)
-            out.append(WindowReport(tuple(float(r) for r in rvec), sol, rep))
-        return out
+                lanes.append((i, sol, traces))
+        reps = simulate_multi_tenant_batch(
+            self.device, w_tr, [[s.workload for s in specs] for _ in lanes],
+            [sol.pm for _, sol, _ in lanes],
+            [sol.bss for _, sol, _ in lanes],
+            [traces for _, _, traces in lanes],
+            tau_caps=[sol.tau_tr for _, sol, _ in lanes], backend=backend)
+        by_window = {i: rep for (i, _, _), rep in zip(lanes, reps)}
+        return [WindowReport(tuple(float(r) for r in rvec), sol,
+                             by_window.get(i))
+                for i, (rvec, sol) in enumerate(zip(rate_windows, sols))]

@@ -30,6 +30,28 @@ The native / streams paths are stochastic by design (contention jitter); they
 use seeded NumPy generators and a cumulative-sum service-time kernel
 (``c = max-accumulate(ready - cumsum_prev) + cumsum``), deterministic per
 seed but not bitwise-coupled to the seed's ``random.Random`` streams.
+
+Backends (contract; see ``docs/exactness.md`` for the full ladder):
+
+ * ``backend="numpy"`` (default) — the **reference**: managed results are
+   bitwise-equal to the scalar loops above; this is what the identity tests
+   pin and what every other backend is judged against.
+ * ``backend="jax"`` — the managed kernel expressed as a max-plus
+   ``jax.lax.associative_scan`` (``c_k = max(c_{k-1}, ready_k) + e_k`` is the
+   composition of affine max-plus maps ``x -> max(x + e_k, ready_k + e_k)``),
+   jit + vmap'd over a *lane* axis so many (power mode, batch size, trace)
+   simulations — including multi-tenant lanes with padded event axes — run as
+   one on-accelerator program (``simulate_batch`` /
+   ``simulate_multi_tenant_batch``). The scan reassociates float adds and
+   skips the boundary replay of ``_fill_counts``, so jax results are
+   *tolerance-checked* against NumPy (|Δlatency| ≲ K·eps·T, enforced at
+   atol=1e-8 s / rtol=1e-9 by ``tests/test_simulate.py``; train-minibatch
+   counts may differ only on quotient-boundary cases), **not** bitwise.
+   Backend selection follows ``core.backend.resolve_backend``: ``None``
+   defers to ``FULCRUM_ENGINE_BACKEND`` and degrades to NumPy when jax is
+   unavailable. Reports from the batched paths are built by one vectorized
+   report builder: a single padded sort fills every lane's quantile /
+   violation-rate cache.
 """
 from __future__ import annotations
 
@@ -40,6 +62,7 @@ from typing import Callable, Optional, Sequence
 
 import numpy as np
 
+from repro.core.backend import require_jax, resolve_backend
 from repro.core.device_model import DeviceModel, WorkloadProfile
 from repro.core.powermode import PowerMode
 
@@ -161,10 +184,21 @@ class ExecutionReport:
     duration: float
     power: float
     trace: Optional[ArrivalTrace] = None   # the arrivals that were executed
+    _sorted: Optional[np.ndarray] = dataclasses.field(
+        default=None, init=False, repr=False, compare=False)
 
     @property
     def train_throughput(self) -> float:
         return self.train_minibatches / self.duration
+
+    @property
+    def sorted_latencies(self) -> np.ndarray:
+        """Ascending latencies; the cache behind every quantile / violation
+        query. The batched report builder (``_presort_reports``) fills it
+        with one vectorized sort across all lanes of a batch."""
+        if self._sorted is None:
+            self._sorted = np.sort(np.asarray(self.latencies, np.float64))
+        return self._sorted
 
     def latency_quantile(self, q: float) -> float:
         """Nearest-rank quantile: the smallest sample with at least a q
@@ -173,15 +207,15 @@ class ExecutionReport:
         n = len(self.latencies)
         if n == 0:
             return 0.0
-        xs = np.sort(np.asarray(self.latencies, np.float64))
+        xs = self.sorted_latencies
         return float(xs[min(n - 1, max(0, math.ceil(q * n) - 1))])
 
     def violation_rate(self, latency_budget: float) -> float:
         n = len(self.latencies)
         if n == 0:
             return 0.0
-        xs = np.asarray(self.latencies, np.float64)
-        return float(np.count_nonzero(xs > latency_budget)) / n
+        xs = self.sorted_latencies
+        return float(n - np.searchsorted(xs, latency_budget, side="right")) / n
 
 
 # ---------------------------------------------------------------------------
@@ -272,6 +306,32 @@ def _queue_completions(ready: np.ndarray, exec_t: np.ndarray) -> np.ndarray:
 def _latencies(completions: np.ndarray, times: np.ndarray,
                bs: int) -> np.ndarray:
     return np.repeat(completions, bs) - times[:completions.size * bs]
+
+
+def _presort_reports(reports: Sequence[ExecutionReport]) -> None:
+    """Batched report builder: fill every report's quantile/violation cache
+    with ONE vectorized sort over a padded (lane, request) matrix, so
+    per-lane statistics of a batch are computed vectorized rather than one
+    Python-level sort per report. +inf padding keeps each lane's real
+    latencies as the leading prefix after the sort."""
+    lats = [np.asarray(r.latencies, np.float64) for r in reports]
+    R = max((a.size for a in lats), default=0)
+    if R == 0:
+        for r in reports:
+            r._sorted = np.empty(0)
+        return
+    total = sum(a.size for a in lats)
+    if len(lats) * R > 4 * total:      # highly ragged: padding would cost
+        for r, a in zip(reports, lats):        # far more than it batches
+            r._sorted = np.sort(a)
+        return
+    mat = np.full((len(lats), R), np.inf)
+    for i, a in enumerate(lats):
+        mat[i, :a.size] = a
+    mat.sort(axis=1)
+    for i, (r, a) in enumerate(zip(reports, lats)):
+        # copy: a view would pin the whole padded matrix per report
+        r._sorted = mat[i, :a.size].copy()
 
 
 def _time_power(device: DeviceModel, w: WorkloadProfile, pm: PowerMode,
@@ -365,6 +425,71 @@ ENGINES: dict[str, Callable[..., ExecutionReport]] = {
 
 
 # ---------------------------------------------------------------------------
+# jax backend: the managed kernel as a vmapped max-plus associative scan.
+# c_k = max(c_{k-1}, ready_k) + e_k is the composition of affine max-plus
+# maps f_k(x) = max(x + a_k, b_k) with a_k = e_k, b_k = ready_k + e_k;
+# (f_r . f_l) keeps that form with (a, b) = (a_l + a_r, max(b_l + a_r, b_r)),
+# so an associative scan over the (a, b) pairs yields every prefix
+# composition, and c_k = prefix_k applied to c_0 = 0 = max(A_k, B_k).
+# Lanes are padded with ready = +inf, exec = 0 (absorbing for both ops).
+# ---------------------------------------------------------------------------
+
+_JAX_ENGINE_CACHE: dict = {}
+
+
+def _jax_engine() -> Callable:
+    if "managed" in _JAX_ENGINE_CACHE:
+        return _JAX_ENGINE_CACHE["managed"]
+    jax, jnp, enable_x64 = require_jax()
+
+    def combine(left, right):
+        a_l, b_l = left
+        a_r, b_r = right
+        return a_l + a_r, jnp.maximum(b_l + a_r, b_r)
+
+    def one_lane(ready, exec_t, t_tr, tau_cap):
+        a, b = jax.lax.associative_scan(combine, (exec_t, ready + exec_t))
+        c = jnp.maximum(a, b)
+        start = jnp.concatenate([jnp.zeros(1), c[:-1]])
+        # floor estimate only — no boundary replay on-accelerator, hence the
+        # jax backend's tolerance (not bitwise) contract for trained counts
+        fills = jnp.clip(jnp.floor((ready - start) / t_tr), 0.0, tau_cap)
+        fills = jnp.where(jnp.isfinite(ready), fills, 0.0)
+        return c, fills.sum()
+
+    kernel = jax.jit(jax.vmap(one_lane))
+
+    def run(ready, exec_t, t_tr, tau_cap):
+        with enable_x64():
+            c, trained = kernel(jnp.asarray(ready), jnp.asarray(exec_t),
+                                jnp.asarray(t_tr), jnp.asarray(tau_cap))
+        return np.asarray(c), np.asarray(trained)
+
+    _JAX_ENGINE_CACHE["managed"] = run
+    return run
+
+
+def _pad_lanes(readies: Sequence[np.ndarray],
+               execs: Sequence[np.ndarray]) -> tuple[np.ndarray, np.ndarray]:
+    """Stack ragged per-lane event vectors into (lanes, K_pad) arrays. K_pad
+    is the next power of two so trace-length jitter across calls reuses a
+    handful of jit compilations instead of one per distinct length."""
+    k_max = max((r.size for r in readies), default=0)
+    k_pad = max(8, 1 << max(0, k_max - 1).bit_length())
+    ready = np.full((len(readies), k_pad), np.inf)
+    exec_t = np.zeros((len(readies), k_pad))
+    for i, (r, e) in enumerate(zip(readies, execs)):
+        ready[i, :r.size] = r
+        exec_t[i, :e.size] = e
+    return ready, exec_t
+
+
+def _tau_array(tau_caps: Sequence[Optional[int]]) -> np.ndarray:
+    return np.array([np.inf if c is None else float(max(0, int(c)))
+                     for c in tau_caps])
+
+
+# ---------------------------------------------------------------------------
 # multi-tenant managed interleaving: N inference streams + training fill
 # ---------------------------------------------------------------------------
 
@@ -411,14 +536,20 @@ def simulate_multi_tenant(device: DeviceModel,
                           stream_workloads: Sequence[WorkloadProfile],
                           pm: PowerMode, bss: Sequence[int],
                           traces: Sequence[ArrivalTrace],
-                          tau_cap: Optional[int] = None) -> MultiTenantReport:
+                          tau_cap: Optional[int] = None,
+                          backend: Optional[str] = None) -> MultiTenantReport:
     """N-stream managed interleaving on one device: streams' minibatches are
     served in ready order (one DNN at a time), training fills the remaining
     slack conservatively. With one stream this is exactly the pair managed
-    engine (and the seed scalar loop) — the engine's exactness contract."""
+    engine (and the seed scalar loop) — the engine's exactness contract.
+    ``backend="jax"`` routes through the batched scan engine (one lane)."""
     n = len(stream_workloads)
     if not (len(bss) == len(traces) == n):
         raise ValueError("stream workloads / batch sizes / traces must align")
+    if resolve_backend(backend) == "jax":
+        return simulate_multi_tenant_batch(
+            device, w_tr, [stream_workloads], [pm], [bss], [traces],
+            tau_caps=[tau_cap], backend="jax")[0]
     tps = [_time_power(device, w, pm, int(b))
            for w, b in zip(stream_workloads, bss)]
     t_ins = [t for t, _ in tps]
@@ -446,17 +577,148 @@ def simulate_multi_tenant(device: DeviceModel,
                              ArrivalTrace.merge(traces))
 
 
+def simulate_multi_tenant_batch(
+        device: DeviceModel, w_tr: Optional[WorkloadProfile],
+        stream_workloads: Sequence[Sequence[WorkloadProfile]],
+        pms: Sequence[PowerMode], bsss: Sequence[Sequence[int]],
+        tracess: Sequence[Sequence[ArrivalTrace]],
+        tau_caps: Optional[Sequence[Optional[int]]] = None,
+        backend: Optional[str] = None) -> list[MultiTenantReport]:
+    """Run many N-stream managed simulations as one batch (one lane per
+    multi-tenant run; lanes may have *different* tenant counts — the merged
+    event axis is padded per lane, so a 2-tenant and a 4-tenant run share
+    one vmapped program). Per-stream event merging (stable time sort, ties
+    by stream index) happens host-side exactly as the NumPy engine does;
+    only the scan arithmetic differs on jax. All reports across all lanes
+    and streams share one vectorized report-builder pass."""
+    n = len(pms)
+    if not (len(stream_workloads) == len(bsss) == len(tracess) == n):
+        raise ValueError("stream_workloads / pms / bsss / tracess must align")
+    caps = list(tau_caps) if tau_caps is not None else [None] * n
+    if len(caps) != n:
+        raise ValueError("tau_caps must align with the lanes")
+    if n == 0:
+        return []
+    backend = resolve_backend(backend)
+    if backend == "numpy":
+        # pass the resolved backend through: a default (env-var) jax
+        # request must not bounce each lane back into the jax path
+        reports = [simulate_multi_tenant(device, w_tr, ws, pm, bss, traces,
+                                         tau_cap=cap, backend="numpy")
+                   for ws, pm, bss, traces, cap
+                   in zip(stream_workloads, pms, bsss, tracess, caps)]
+        _presort_reports([r for mt in reports for r in mt.streams])
+        return reports
+    lanes = []
+    for ws, pm, bss, traces, cap in zip(stream_workloads, pms, bsss,
+                                        tracess, caps):
+        if not (len(ws) == len(bss) == len(traces)):
+            raise ValueError("stream workloads / batch sizes / traces "
+                             "must align")
+        tps = [_time_power(device, w, pm, int(b)) for w, b in zip(ws, bss)]
+        ttr = _time_power(device, w_tr, pm, None) if w_tr else (np.inf, 0.0)
+        ready, exec_t, sid = _merge_events(traces, bss, [t for t, _ in tps])
+        lanes.append((tps, ttr, ready, exec_t, sid))
+    ready, exec_t = _pad_lanes([ln[2] for ln in lanes],
+                               [ln[3] for ln in lanes])
+    c, trained_f = _jax_engine()(ready, exec_t,
+                                 np.array([ln[1][0] for ln in lanes]),
+                                 _tau_array(caps))
+    out, flat = [], []
+    for i, (tps, ttr, ready_i, _, sid) in enumerate(lanes):
+        comp = c[i, :ready_i.size]
+        trained = int(round(float(trained_f[i]))) if w_tr else 0
+        power = ttr[1] if trained else 0.0
+        for _, p_in in tps:
+            power = max(power, p_in)
+        traces = tracess[i]
+        duration = max((tr.duration for tr in traces), default=0.0)
+        streams = []
+        for j, (tr, b) in enumerate(zip(traces, bsss[i])):
+            comp_j = comp[sid == j]
+            lat = np.repeat(comp_j, int(b)) - tr.times[:comp_j.size * int(b)]
+            streams.append(ExecutionReport("managed", lat, 0, tr.duration,
+                                           power, tr))
+        flat.extend(streams)
+        out.append(MultiTenantReport(streams, trained, duration, power,
+                                     ArrivalTrace.merge(traces)))
+    _presort_reports(flat)
+    return out
+
+
 def simulate(device: DeviceModel, w_tr: Optional[WorkloadProfile],
              w_in: WorkloadProfile, pm: PowerMode, bs: int,
              trace: ArrivalTrace, approach: str = "managed", seed: int = 0,
-             tau_cap: Optional[int] = None) -> ExecutionReport:
-    """Run one execution approach over an arrival trace."""
+             tau_cap: Optional[int] = None,
+             backend: Optional[str] = None) -> ExecutionReport:
+    """Run one execution approach over an arrival trace.
+
+    ``backend`` selects the engine implementation for the deterministic
+    managed kernel: ``"numpy"`` (the reference) or ``"jax"`` (max-plus scan);
+    ``None`` resolves via ``core.backend.resolve_backend``. The stochastic
+    native/streams models always run on NumPy."""
     try:
         engine = ENGINES[approach]
     except KeyError:
         raise ValueError(f"unknown approach {approach!r}; "
                          f"use one of {sorted(ENGINES)}") from None
+    backend = resolve_backend(backend)
+    if backend == "jax" and approach == "managed":
+        return simulate_batch(device, w_tr, w_in, [pm], [bs], [trace],
+                              tau_caps=[tau_cap], backend="jax")[0]
     return engine(device, w_tr, w_in, pm, bs, trace, seed, tau_cap)
+
+
+def simulate_batch(device: DeviceModel, w_tr: Optional[WorkloadProfile],
+                   w_in: WorkloadProfile, pms: Sequence[PowerMode],
+                   bss: Sequence[int], traces: Sequence[ArrivalTrace],
+                   tau_caps: Optional[Sequence[Optional[int]]] = None,
+                   approach: str = "managed", seed: int = 0,
+                   backend: Optional[str] = None) -> list[ExecutionReport]:
+    """Run many (power mode, batch size, trace) simulations as one batch.
+
+    One report per lane. On ``backend="jax"`` all managed lanes run as a
+    single jit + vmap max-plus-scan program (lanes padded to a shared event
+    count); on NumPy the per-lane kernels run in a loop. Either way the
+    reports' quantile/violation caches are filled by the vectorized report
+    builder. Only the managed approach is deterministic enough to batch on
+    jax; native/streams lanes always use the seeded NumPy models."""
+    n = len(pms)
+    if not (len(bss) == len(traces) == n):
+        raise ValueError("pms / bss / traces must align")
+    caps = list(tau_caps) if tau_caps is not None else [None] * n
+    if len(caps) != n:
+        raise ValueError("tau_caps must align with the lanes")
+    if n == 0:
+        return []
+    backend = resolve_backend(backend)
+    if backend == "numpy" or approach != "managed":
+        engine = ENGINES[approach]
+        reports = [engine(device, w_tr, w_in, pm, int(bs), tr, seed, cap)
+                   for pm, bs, tr, cap in zip(pms, bss, traces, caps)]
+        _presort_reports(reports)
+        return reports
+    tps = [_time_power(device, w_in, pm, int(bs)) for pm, bs in zip(pms, bss)]
+    ttr = [_time_power(device, w_tr, pm, None) if w_tr else (np.inf, 0.0)
+           for pm in pms]
+    readies = [_batch_ready(tr.times, int(bs))
+               for tr, bs in zip(traces, bss)]
+    execs = [np.broadcast_to(np.float64(t), r.shape)
+             for (t, _), r in zip(tps, readies)]
+    ready, exec_t = _pad_lanes(readies, execs)
+    c, trained_f = _jax_engine()(ready, exec_t,
+                                 np.array([t for t, _ in ttr]),
+                                 _tau_array(caps))
+    reports = []
+    for i, (tr, bs) in enumerate(zip(traces, bss)):
+        comp = c[i, :readies[i].size]
+        trained = int(round(float(trained_f[i]))) if w_tr else 0
+        power = max(tps[i][1], ttr[i][1] if trained else 0.0)
+        reports.append(ExecutionReport(
+            "managed", _latencies(comp, tr.times, int(bs)), trained,
+            tr.duration, power, tr))
+    _presort_reports(reports)
+    return reports
 
 
 # ---------------------------------------------------------------------------

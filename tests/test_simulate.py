@@ -1,10 +1,13 @@
 """Trace-driven execution engine: the vectorized managed simulator must be
 *identical* (latencies, minibatch counts, power) to the seed's scalar loop
 across randomized (workload, pm, bs, rate) configs and every trace kind;
-native/streams are seeded-deterministic with the same queueing skeleton."""
+native/streams are seeded-deterministic with the same queueing skeleton.
+The jax backend (max-plus associative scan) is cross-checked against the
+NumPy reference within the tolerance documented in docs/exactness.md."""
 import numpy as np
 import pytest
 
+from repro.core import backend as B
 from repro.core import problem as P
 from repro.core import simulate as S
 from repro.core.device_model import (DeviceModel, INFER_WORKLOADS,
@@ -211,3 +214,189 @@ def test_unknown_approach_raises():
     with pytest.raises(ValueError, match="unknown approach"):
         S.simulate(DEV, None, INFER_WORKLOADS["lstm"], SPACE.maxn(), 1,
                    S.ArrivalTrace.uniform(10.0, 1.0), approach="magic")
+
+
+# ---------------------------------------------------------------------------
+# jax backend: max-plus scan engine vs the NumPy reference, within the
+# tolerance documented in docs/exactness.md (the scan reassociates adds and
+# skips the fill-count boundary replay, so it is NOT bitwise)
+# ---------------------------------------------------------------------------
+
+needs_jax = pytest.mark.skipif(not B.jax_available(),
+                               reason="jax unavailable")
+TOL = dict(rtol=1e-9, atol=1e-8)
+TRAIN_WS = list(TRAIN_WORKLOADS.values())
+INFER_WS = list(INFER_WORKLOADS.values())
+
+
+def _assert_engine_close(ref, got):
+    np.testing.assert_allclose(np.asarray(got.latencies, np.float64),
+                               np.asarray(ref.latencies, np.float64), **TOL)
+    # fill counts may flip only on quotient-boundary cases (floor vs replay)
+    assert abs(ref.train_minibatches - got.train_minibatches) <= 2
+    if bool(ref.train_minibatches) == bool(got.train_minibatches):
+        assert ref.power == got.power
+    assert ref.duration == got.duration
+
+
+@needs_jax
+@pytest.mark.parametrize("seed", range(4))
+def test_jax_engine_matches_numpy_randomized(seed):
+    rng = np.random.default_rng(100 + seed)
+    w_tr = TRAIN_WS[seed % len(TRAIN_WS)] if seed % 2 == 0 else None
+    w_in = INFER_WS[seed % len(INFER_WS)]
+    pms, bss, traces, caps = [], [], [], []
+    for _ in range(8):
+        _, _, pm, bs, trace, cap = _random_config(rng)
+        pms.append(pm), bss.append(bs), traces.append(trace), caps.append(cap)
+    ref = S.simulate_batch(DEV, w_tr, w_in, pms, bss, traces,
+                           tau_caps=caps, backend="numpy")
+    got = S.simulate_batch(DEV, w_tr, w_in, pms, bss, traces,
+                           tau_caps=caps, backend="jax")
+    for a, b in zip(ref, got):
+        _assert_engine_close(a, b)
+
+
+@needs_jax
+def test_jax_single_simulate_matches_numpy():
+    w_tr = TRAIN_WORKLOADS["mobilenet"]
+    w_in = INFER_WORKLOADS["mobilenet"]
+    trace = S.ArrivalTrace.poisson(60.0, 30.0, seed=7)
+    ref = S.simulate(DEV, w_tr, w_in, SPACE.maxn(), 16, trace, "managed")
+    got = S.simulate(DEV, w_tr, w_in, SPACE.maxn(), 16, trace, "managed",
+                     backend="jax")
+    _assert_engine_close(ref, got)
+
+
+@needs_jax
+def test_jax_engine_backlogged_within_tolerance():
+    """Unsustainable config: the scan must track the queue buildup too."""
+    trace = S.ArrivalTrace.uniform(60.0, 20.0)
+    ref = S.simulate(DEV, TRAIN_WORKLOADS["mobilenet"],
+                     INFER_WORKLOADS["bert"], MODES[0], 16, trace, "managed")
+    got = S.simulate(DEV, TRAIN_WORKLOADS["mobilenet"],
+                     INFER_WORKLOADS["bert"], MODES[0], 16, trace, "managed",
+                     backend="jax")
+    _assert_engine_close(ref, got)
+
+
+@needs_jax
+@pytest.mark.parametrize("seed", range(3))
+def test_jax_multi_tenant_matches_numpy_randomized(seed):
+    """Ragged tenant counts across lanes (padded stream axes), including
+    idle tenants whose trace is empty."""
+    rng = np.random.default_rng(200 + seed)
+    w_tr = TRAIN_WS[seed % len(TRAIN_WS)] if seed != 1 else None
+    wss, pms, bsss, tracess, caps = [], [], [], [], []
+    for lane in range(4):
+        n = int(rng.integers(1, 4))
+        wss.append([INFER_WS[rng.integers(len(INFER_WS))] for _ in range(n)])
+        pms.append(MODES[rng.integers(len(MODES))])
+        bsss.append([int([1, 4, 16, 32][rng.integers(4)]) for _ in range(n)])
+        duration = float(rng.uniform(5.0, 25.0))
+        tracess.append([S.ArrivalTrace.poisson(
+            0.0 if (lane == 0 and j == 0) or rng.random() < 0.15
+            else float(rng.uniform(5.0, 60.0)),
+            duration, seed=int(rng.integers(1000))) for j in range(n)])
+        caps.append(None if rng.random() < 0.7 else int(rng.integers(0, 4)))
+    ref = S.simulate_multi_tenant_batch(DEV, w_tr, wss, pms, bsss, tracess,
+                                        tau_caps=caps, backend="numpy")
+    got = S.simulate_multi_tenant_batch(DEV, w_tr, wss, pms, bsss, tracess,
+                                        tau_caps=caps, backend="jax")
+    assert tracess[0][0].times.size == 0           # an idle lane really ran
+    for a, b in zip(ref, got):
+        assert abs(a.train_minibatches - b.train_minibatches) <= 2
+        assert len(a.streams) == len(b.streams)
+        for ra, rb in zip(a.streams, b.streams):
+            np.testing.assert_allclose(
+                np.asarray(rb.latencies, np.float64),
+                np.asarray(ra.latencies, np.float64), **TOL)
+
+
+@needs_jax
+def test_jax_multi_tenant_single_call_matches_numpy():
+    ws = [INFER_WORKLOADS["mobilenet"], INFER_WORKLOADS["lstm"]]
+    traces = [S.ArrivalTrace.poisson(30.0, 20.0, seed=1),
+              S.ArrivalTrace.uniform(50.0, 20.0)]
+    ref = S.simulate_multi_tenant(DEV, TRAIN_WORKLOADS["resnet18"], ws,
+                                  SPACE.maxn(), [4, 16], traces)
+    got = S.simulate_multi_tenant(DEV, TRAIN_WORKLOADS["resnet18"], ws,
+                                  SPACE.maxn(), [4, 16], traces,
+                                  backend="jax")
+    assert abs(ref.train_minibatches - got.train_minibatches) <= 2
+    for ra, rb in zip(ref.streams, got.streams):
+        np.testing.assert_allclose(np.asarray(rb.latencies, np.float64),
+                                   np.asarray(ra.latencies, np.float64),
+                                   **TOL)
+
+
+# ---------------------------------------------------------------------------
+# backend selection + batched report builder
+# ---------------------------------------------------------------------------
+
+def test_jax_backend_selection_defaults_to_numpy_when_unavailable(monkeypatch):
+    """Regression: with jax absent the default path must degrade to the
+    NumPy reference — env-var requests included — while an *explicit*
+    backend='jax' argument raises."""
+    monkeypatch.setattr(B, "_JAX_OK", False)
+    monkeypatch.setenv(B.ENGINE_BACKEND_ENV, "jax")
+    assert B.resolve_backend(None) == "numpy"
+    monkeypatch.delenv(B.ENGINE_BACKEND_ENV)
+    assert B.resolve_backend(None) == "numpy"
+    with pytest.raises(RuntimeError, match="requires jax"):
+        B.resolve_backend("jax")
+    # the engine default still runs, on the reference backend
+    trace = S.ArrivalTrace.uniform(20.0, 2.0)
+    rep = S.simulate(DEV, None, INFER_WORKLOADS["lstm"], SPACE.maxn(), 4,
+                     trace)
+    ref = S.managed_scalar(DEV, None, INFER_WORKLOADS["lstm"], SPACE.maxn(),
+                           4, trace)
+    assert rep.latencies.tolist() == ref.latencies
+
+
+def test_explicit_numpy_backend_wins_over_env_jax(monkeypatch):
+    """Regression: backend='numpy' must run the reference engine even when
+    FULCRUM_ENGINE_BACKEND=jax — the batch paths' per-lane delegation must
+    not re-resolve the backend from the environment."""
+    monkeypatch.setenv(B.ENGINE_BACKEND_ENV, "jax")
+    monkeypatch.setitem(
+        S._JAX_ENGINE_CACHE, "managed",
+        lambda *a: pytest.fail("jax engine ran despite backend='numpy'"))
+    w_in = INFER_WORKLOADS["mobilenet"]
+    trace = S.ArrivalTrace.uniform(40.0, 5.0)
+    S.simulate_batch(DEV, None, w_in, [SPACE.maxn()], [16], [trace],
+                     backend="numpy")
+    S.simulate_multi_tenant_batch(DEV, None, [[w_in]], [SPACE.maxn()],
+                                  [[16]], [[trace]], backend="numpy")
+    S.simulate(DEV, None, w_in, SPACE.maxn(), 16, trace, "managed",
+               backend="numpy")
+
+
+def test_backend_env_var_selects_jax(monkeypatch):
+    if not B.jax_available():
+        pytest.skip("jax unavailable")
+    monkeypatch.setenv(B.ENGINE_BACKEND_ENV, "jax")
+    assert B.resolve_backend(None) == "jax"
+    with pytest.raises(ValueError, match="unknown backend"):
+        B.resolve_backend("torch")
+
+
+def test_batched_report_builder_matches_per_report_statistics():
+    """The presorted quantile/violation caches must change nothing about
+    the statistics themselves."""
+    rng = np.random.default_rng(5)
+    w_in = INFER_WORKLOADS["mobilenet"]
+    pms = [MODES[int(rng.integers(len(MODES)))] for _ in range(4)]
+    traces = [S.ArrivalTrace.poisson(float(rng.uniform(10, 60)), 15.0,
+                                     seed=i) for i in range(4)]
+    reps = S.simulate_batch(DEV, None, w_in, pms, [4, 16, 1, 32], traces)
+    for rep in reps:
+        assert rep._sorted is not None         # builder pre-filled the cache
+        xs = np.asarray(rep.latencies, np.float64)
+        for q in (0.01, 0.5, 0.75, 0.95, 1.0):
+            fresh = S.ExecutionReport("managed", xs.tolist(), 0, 1.0, 0.0)
+            assert rep.latency_quantile(q) == fresh.latency_quantile(q)
+        for budget in (0.0, float(np.median(xs)) if xs.size else 0.5, 10.0):
+            want = (float(np.count_nonzero(xs > budget)) / xs.size
+                    if xs.size else 0.0)
+            assert rep.violation_rate(budget) == want

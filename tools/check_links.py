@@ -1,0 +1,57 @@
+"""Fail on broken relative links in markdown files (no dependencies).
+
+Checks inline markdown links ``[text](target)`` whose target is a relative
+path: the target (resolved against the file's directory, fragment stripped)
+must exist. External schemes (http/https/mailto) are ignored; bare fragments
+(``#section``) are ignored. Directories may be given as arguments and are
+scanned for ``*.md`` non-recursively.
+
+Usage: python tools/check_links.py README.md docs
+Exit status 1 when any link is broken (the CI docs step).
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+# inline links only; reference-style links are not used in this repo
+LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+
+
+def check_file(md: Path) -> list[str]:
+    errors = []
+    for target in LINK.findall(md.read_text(encoding="utf-8")):
+        if target.startswith(SKIP_PREFIXES):
+            continue
+        path = target.split("#", 1)[0]
+        if not path:
+            continue
+        if not (md.parent / path).exists():
+            errors.append(f"{md}: broken relative link -> {target}")
+    return errors
+
+
+def main(argv: list[str]) -> int:
+    files: list[Path] = []
+    for arg in argv or ["README.md", "docs"]:
+        p = Path(arg)
+        if p.is_dir():
+            files.extend(sorted(p.glob("*.md")))
+        else:
+            files.append(p)
+    errors = []
+    for md in files:
+        if not md.exists():
+            errors.append(f"{md}: file not found")
+            continue
+        errors.extend(check_file(md))
+    for e in errors:
+        print(e, file=sys.stderr)
+    print(f"check_links: {len(files)} files, {len(errors)} broken links")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
