@@ -8,25 +8,68 @@ All strategies run through Fulcrum's re-planning controller
 strategies (ALS/RND/NN) are fitted once per DNN via the scenario registry
 and answer every window. The GMD plan sequence is additionally *executed*
 window-by-window with the trace-driven engine (core.simulate), reporting the
-realized tail latency and violation rate."""
+realized tail latency and violation rate.
+
+Closed-loop section (``core.controller``): the same sweep served end-to-end
+by ``serve_dynamic`` over seeded Poisson arrivals under a config matrix —
+oracle vs EWMA-estimated rates, executed-latency feedback on/off,
+mode-switch cost on/off — reporting executed violation rate, p95, request
+throughput, their deltas against the open-loop oracle baseline, and the
+fraction of windows whose executed p95 meets the latency budget. Everything
+is snapshotted to ``benchmarks/results/BENCH_dynamic.json``; the solver
+rows (``rows``) are byte-stable across PRs."""
 from __future__ import annotations
 
 import math
 import random
+from pathlib import Path
+
+import numpy as np
 
 from repro.core import problem as P
 from repro.core.als import QuadrantRanges
+from repro.core.controller import ControllerConfig
 from repro.core.device_model import INFER_WORKLOADS
 from repro.core.scheduler import Fulcrum
 from repro.core.simulate import ArrivalTrace, ExecutionReport, simulate
 
 from benchmarks.common import BACKEND, DEV, ORACLE, SPACE, excess_pct, \
-    median, row
+    median, row, snapshot
 
 POWER, LATENCY = 40.0, 0.1
 NN_EPOCHS = 300
 WINDOW_S = 30.0          # engine execution horizon per rate window
 STRATEGIES = ("gmd", "als145", "rnd150", "rnd250", "nn250")
+SNAPSHOT = Path(__file__).parent / "results" / "BENCH_dynamic.json"
+
+# A window "satisfies the latency budget" when its executed p95 is within
+# it, i.e. executed violation rate <= 5%; an unsolved window does not.
+SATISFIED_VIOL = 0.05
+
+# The closed-loop config matrix: rate estimation x feedback x switch cost.
+# EWMA configs carry backlog (requests do not vanish at window boundaries)
+# and plan with a 1.5x rate margin — the estimator only knows the previous
+# window's arrivals, so the margin buys service headroom against upward
+# rate moves, and the interval solve keeps the latency budget pinned at the
+# unmargined estimate, so headroom costs power, not fill latency (azure's
+# 2.5x spikes stay out of reach of any window-boundary planner; admission
+# control is the ROADMAP follow-up for those).
+# 0.5 s per power-mode switch is the measured Jetson nvpmodel ballpark.
+# The matrix runs over both arrival models: uniform ticks are the §5.4
+# contract the plans guarantee (the >=90%-of-windows criterion is judged
+# there); seeded Poisson is the burst stress, where the 100 ms budget is
+# queueing-infeasible for most plans regardless of controller.
+_EWMA = dict(rate_estimator="ewma", rate_margin=1.5, carry_backlog=True)
+CLOSED_LOOP_CONFIGS = {
+    "oracle": ControllerConfig(),
+    "oracle_fb": ControllerConfig(feedback=True),
+    "oracle_fb_switch": ControllerConfig(feedback=True, mode_switch_s=0.5),
+    "ewma": ControllerConfig(**_EWMA),
+    "ewma_fb": ControllerConfig(feedback=True, **_EWMA),
+    "ewma_fb_switch": ControllerConfig(feedback=True, mode_switch_s=0.5,
+                                       **_EWMA),
+}
+CLOSED_LOOP_ARRIVALS = ("uniform", "poisson")
 
 
 def make_traces(windows: int = 24) -> dict[str, list[float]]:
@@ -42,8 +85,80 @@ def make_traces(windows: int = 24) -> dict[str, list[float]]:
     return {"poisson": poisson, "alibaba": alibaba, "azure": azure}
 
 
-def run(full: bool = False, dnns=None) -> list[str]:
+def _closed_loop_rows(traces: dict, dnns, records: dict) -> list[str]:
+    """Serve every (dnn, trace, arrival model) end-to-end under the
+    closed-loop config matrix; per-config records land in ``records`` and
+    CSV rows return."""
     rows = []
+    sat_counts: dict[tuple, list[int]] = {
+        (a, c): [0, 0] for a in CLOSED_LOOP_ARRIVALS
+        for c in CLOSED_LOOP_CONFIGS}
+    for name in dnns:
+        w = INFER_WORKLOADS[name]
+        f = Fulcrum(DEV, SPACE, QuadrantRanges((0.05, 1.0), (30.0, 90.0)),
+                    nn_epochs=NN_EPOCHS)
+        for trace_name, rates in traces.items():
+            for arrivals in CLOSED_LOOP_ARRIVALS:
+                base = None
+                for cname, cfg in CLOSED_LOOP_CONFIGS.items():
+                    wins = f.serve_dynamic(w, POWER, LATENCY, rates, "gmd",
+                                           window_duration=WINDOW_S,
+                                           arrivals=arrivals, seed=7,
+                                           controller=cfg)
+                    lats = np.concatenate(
+                        [np.asarray(wr.report.latencies, np.float64)
+                         for wr in wins if wr.report is not None]
+                        or [np.empty(0)])
+                    agg = ExecutionReport("managed", lats, 0, 1.0, 0.0)
+                    sat = [wr.report is not None
+                           and wr.report.violation_rate(LATENCY)
+                           <= SATISFIED_VIOL for wr in wins]
+                    rec = {
+                        "viol_pct": 100.0 * agg.violation_rate(LATENCY),
+                        "p95_ms": 1e3 * agg.latency_quantile(0.95),
+                        "throughput_rps": lats.size / (WINDOW_S * len(rates)),
+                        "satisfied_frac": sum(sat) / len(wins),
+                        "windows": len(wins),
+                        "served_windows": sum(wr.report is not None
+                                              for wr in wins),
+                        "mode_switches": sum(wr.mode_switch_s > 0
+                                             for wr in wins),
+                        "carried_requests": sum(wr.carried_requests
+                                                for wr in wins),
+                        "configs": len(wins),
+                    }
+                    if cname == "oracle":
+                        base = rec
+                    rec["d_viol_pct"] = rec["viol_pct"] - base["viol_pct"]
+                    rec["d_throughput_rps"] = (rec["throughput_rps"]
+                                               - base["throughput_rps"])
+                    records[f"closed_loop/{name}/{trace_name}/{arrivals}/"
+                            f"{cname}"] = rec
+                    sat_counts[(arrivals, cname)][0] += sum(sat)
+                    sat_counts[(arrivals, cname)][1] += len(wins)
+                    rows.append(row(
+                        f"dynamic_closed/{name}/{trace_name}/{arrivals}/"
+                        f"{cname}/viol_pct", rec["viol_pct"],
+                        f"sat={rec['satisfied_frac']:.3f};"
+                        f"d_tput={rec['d_throughput_rps']:+.2f}rps;"
+                        f"p95={rec['p95_ms']:.1f}ms"))
+    for (arrivals, cname), (good, total) in sat_counts.items():
+        frac = good / total if total else float("nan")
+        records[f"closed_loop_summary/{arrivals}/{cname}"] = {
+            "satisfied_frac": frac, "windows": total, "configs": total}
+        rows.append(row(
+            f"dynamic_closed/summary/{arrivals}/{cname}/satisfied_frac",
+            frac, f"windows={total}"))
+    return rows
+
+
+def run(full: bool = False, dnns=None, closed_loop: bool = True) -> list[str]:
+    rows = []
+    # a restricted DNN subset (e.g. the --quick CI sweep) snapshots to a
+    # side file so it can never clobber the committed full-sweep snapshot,
+    # whose solver rows are byte-stable across PRs
+    path = SNAPSHOT if dnns is None \
+        else SNAPSHOT.with_name("BENCH_dynamic_partial.json")
     dnns = dnns or ["resnet50", "mobilenet", "yolov8n", "lstm"]
     traces = make_traces(24 if full else 12)
     for name in dnns:
@@ -94,9 +209,21 @@ def run(full: bool = False, dnns=None) -> list[str]:
                         agg.latency_quantile(0.95) * 1e3,
                         f"viol_pct={100.0*agg.violation_rate(LATENCY):.2f};"
                         f"requests={len(lats)}"))
+    records: dict = {"rows": list(rows)}
+    if closed_loop:
+        rows += _closed_loop_rows(traces, dnns, records)
+    total = sum(len(rates) for rates in traces.values()) * len(dnns)
+    snapshot(path, records, configs=total)
     return rows
 
 
 if __name__ == "__main__":
-    for r in run():
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--quick", action="store_true",
+                    help="2-DNN sweep (CI-sized)")
+    args = ap.parse_args()
+    for r in run(full=args.full,
+                 dnns=["mobilenet", "lstm"] if args.quick else None):
         print(r)

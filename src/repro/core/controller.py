@@ -1,0 +1,307 @@
+"""Closed-loop dynamic serving controller (paper §5.4, ROADMAP closed-loop
+item).
+
+``Fulcrum.serve_dynamic`` re-plans once per rate window. The open-loop form
+is told each window's true arrival rate in advance and forgets everything at
+every window boundary. This module supplies the state that closes the loop,
+in three pieces the scheduler's window driver composes:
+
+ * ``RateEstimator`` — what rate to plan the next window for. ``"oracle"``
+   passes the announced rate through (the open-loop §5.4 configuration);
+   ``"ewma"`` estimates it from the *observed* arrival timestamps of executed
+   windows — an exponentially weighted moving average over inter-arrival
+   gaps, warm-started from the previous window's state (PowerTrain-style
+   feedback adaptation, arXiv 2407.13944).
+ * ``FeedbackPolicy`` — what latency budget to plan the next window against.
+   Scales the nominal budget by a state in (0, 1]: tightened when the
+   previous window's *executed* violation rate / tail latency broke the
+   budget, relaxed back toward nominal while windows run clean. Monotone:
+   a higher executed violation rate never yields a looser next budget.
+ * ``ControllerState`` — one estimator + one policy per stream (multi-tenant
+   windows keep per-tenant state), the carried ``QueueState`` (backlogged
+   requests do not vanish at window boundaries), and the previous window's
+   power mode for mode-switch accounting: switching power modes costs
+   ``mode_switch_s`` wall seconds charged against the window that switches
+   (concurrent-serving switch costs measured on Jetson, arXiv 2508.08430).
+
+``ControllerConfig`` bundles the knobs. The default config is *open loop*
+(oracle rates, no feedback, no carryover, free mode switches): the scheduler
+detects ``closed_loop == False`` and runs the PR-4 batched window replay,
+byte-identical on NumPy. Every closed-loop run is sequential by nature —
+window k+1's plan depends on window k's executed report.
+
+This layer is solver-agnostic: it never imports the scheduler or the
+strategies. The scheduler's ``serve_dynamic`` drives it against either
+engine backend (NumPy reference / jax scan) — and, because both consume
+``ArrivalTrace`` and emit ``ExecutionReport``, against the real runtime
+(``runtime.interleave_runtime``) as well.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.core.simulate import QueueState
+
+_ESTIMATORS = ("oracle", "ewma")
+
+
+@dataclasses.dataclass(frozen=True)
+class ControllerConfig:
+    """Knobs of one closed-loop dynamic serving session.
+
+    The defaults are the open-loop §5.4 configuration (oracle rates, no
+    feedback, no backlog carryover, free mode switches) — ``closed_loop``
+    is then False and ``serve_dynamic`` keeps its PR-4 batched replay,
+    byte-identical on NumPy."""
+    rate_estimator: str = "oracle"   # "oracle" (announced) | "ewma" (observed)
+    ewma_alpha: float = 0.01         # per-gap EWMA weight; effective memory
+    #   is ~(2-alpha)/alpha gaps (~200 at the default — a few seconds of
+    #   arrivals at paper rates, so the estimate still turns over well
+    #   within one window but averages enough exponential gaps to hold its
+    #   relative error near 1/sqrt(ESS) ~ 7% on Poisson traces)
+    rate_margin: float = 1.0         # plan for margin * estimated rate
+    feedback: bool = False           # executed-latency budget feedback
+    tighten: float = 0.5             # max fractional budget cut per window
+    relax: float = 0.5               # recovery fraction toward nominal
+    target_violation: float = 0.0    # tolerated executed violation rate
+    tail_quantile: float = 0.95      # executed tail the policy reacts to
+    min_budget_scale: float = 0.2    # effective budget floor (x nominal)
+    mode_switch_s: float = 0.0       # wall cost charged when the pm changes
+    carry_backlog: bool = False      # chain QueueState across windows
+
+    def __post_init__(self):
+        if self.rate_estimator not in _ESTIMATORS:
+            raise ValueError(f"unknown rate estimator "
+                             f"{self.rate_estimator!r}; use {_ESTIMATORS}")
+        if not 0.0 < self.ewma_alpha <= 1.0:
+            raise ValueError("ewma_alpha must be in (0, 1]")
+        if self.rate_margin <= 0.0:
+            raise ValueError("rate_margin must be positive")
+        if not 0.0 <= self.tighten <= 1.0 or not 0.0 <= self.relax <= 1.0:
+            raise ValueError("tighten/relax must be in [0, 1]")
+        if not 0.0 < self.min_budget_scale <= 1.0:
+            raise ValueError("min_budget_scale must be in (0, 1]")
+        if self.mode_switch_s < 0.0:
+            raise ValueError("mode_switch_s must be >= 0")
+
+    @property
+    def closed_loop(self) -> bool:
+        """True when any knob makes window k+1 depend on window k."""
+        return (self.rate_estimator != "oracle" or self.rate_margin != 1.0
+                or self.feedback or self.carry_backlog
+                or self.mode_switch_s > 0.0)
+
+
+class RateEstimator:
+    """Arrival-rate estimate for one stream, fed by executed windows.
+
+    ``"oracle"`` returns the announced rate untouched. ``"ewma"`` keeps an
+    exponentially weighted moving average of observed inter-arrival gaps
+    (per-gap weight ``alpha``), warm-started across windows: the mean gap —
+    and the last arrival timestamp, so the gap spanning a window boundary
+    counts too — carries from window to window, and the estimate is its
+    reciprocal. Before anything was observed (window 0) the announced rate
+    bootstraps the estimate. A window with fewer than two arrivals folds one
+    right-censored pseudo-gap equal to the window duration, so idle windows
+    decay the estimate instead of pinning it."""
+
+    def __init__(self, kind: str = "ewma", alpha: float = 0.2):
+        if kind not in _ESTIMATORS:
+            raise ValueError(f"unknown rate estimator {kind!r}; "
+                             f"use {_ESTIMATORS}")
+        self.kind = kind
+        self.alpha = float(alpha)
+        self._mean_gap: Optional[float] = None
+        self._last_arrival: Optional[float] = None
+
+    def estimate(self, announced_rate: float) -> float:
+        """The rate to plan the next window for."""
+        if self.kind == "oracle" or self._mean_gap is None:
+            return float(announced_rate)
+        return 1.0 / self._mean_gap if self._mean_gap > 0.0 else 0.0
+
+    def observe(self, times: np.ndarray, duration: float) -> None:
+        """Fold one executed window's observed arrival timestamps (this
+        window's own arrivals only — carried-over requests were observed by
+        the window they arrived in) into the estimate."""
+        if self.kind == "oracle":
+            return
+        times = np.asarray(times, np.float64)
+        gaps = np.diff(times)
+        if (self._last_arrival is not None and times.size
+                and times[0] > self._last_arrival):
+            gaps = np.concatenate([[times[0] - self._last_arrival], gaps])
+        if times.size:
+            self._last_arrival = float(times[-1])
+        if gaps.size == 0:
+            gaps = np.array([float(duration)])
+            if times.size == 0:
+                # the idle span is folded as this pseudo-gap; drop the
+                # boundary anchor so the next window's first arrival does
+                # not fold the same span again as a real gap
+                self._last_arrival = None
+        if self._mean_gap is None:
+            m, gaps = float(gaps[0]), gaps[1:]
+        else:
+            m = self._mean_gap
+        if gaps.size:
+            # exact EWMA over the gap sequence, vectorized:
+            # m <- (1-a)^n m + a * sum_i (1-a)^(n-1-i) g_i
+            a = self.alpha
+            decay = (1.0 - a) ** np.arange(gaps.size - 1, -1, -1)
+            m = (1.0 - a) ** gaps.size * m + a * float(decay @ gaps)
+        self._mean_gap = m
+
+
+class FeedbackPolicy:
+    """Effective-latency-budget governor for one stream.
+
+    State is ``scale`` in (0, 1]: the next window is planned against
+    ``scale * nominal`` while the *executed* violation rate is judged
+    against the nominal budget. After each executed window:
+
+     * violating (rate above ``target_violation``): multiply the scale by
+       ``1 - tighten * severity`` where severity is the larger of the
+       executed violation rate and the executed tail's fractional overshoot
+       of the nominal budget, both clipped to 1 — monotone in the violation
+       rate, floored at ``min_budget_scale``. The cut is deliberately
+       *bounded per window* (at most a ``tighten`` fraction): a queue-
+       flooded window can report tails orders of magnitude over budget, and
+       jumping the scale straight to ``nominal/tail`` would demand plans no
+       power mode can deliver (the next window would go unserved, worse
+       than the violation being corrected).
+     * clean: move the scale back toward 1 by ``relax`` of the remaining
+       gap (never above nominal).
+
+    With ``feedback`` off the policy is inert (scale pinned at 1)."""
+
+    def __init__(self, cfg: ControllerConfig):
+        self.cfg = cfg
+        self.scale = 1.0
+
+    def effective_budget(self, nominal: float) -> float:
+        return float(nominal) * self.scale
+
+    def update(self, violation_rate: float, tail_latency: float,
+               nominal: float) -> None:
+        if not self.cfg.feedback:
+            return
+        c = self.cfg
+        if violation_rate > c.target_violation:
+            overshoot = float(tail_latency) / max(float(nominal), 1e-12) - 1.0
+            severity = min(1.0, max(float(violation_rate),
+                                    min(1.0, max(0.0, overshoot))))
+            self.scale = max(c.min_budget_scale,
+                             self.scale * (1.0 - c.tighten * severity))
+        else:
+            self.scale = min(1.0, self.scale + c.relax * (1.0 - self.scale))
+
+
+class ControllerState:
+    """Cross-window state of one closed-loop serving session: per-stream
+    rate estimators and feedback policies, the carried queue state, and the
+    previously committed power mode."""
+
+    def __init__(self, cfg: ControllerConfig, n_streams: int = 1):
+        self.cfg = cfg
+        self.estimators = [RateEstimator(cfg.rate_estimator, cfg.ewma_alpha)
+                           for _ in range(n_streams)]
+        self.policies = [FeedbackPolicy(cfg) for _ in range(n_streams)]
+        self.carry: Optional[QueueState] = None
+        self.prev_pm = None
+
+    # -- planning inputs ----------------------------------------------------
+    def plan_rates(self, announced: Sequence[float], t0: float = 0.0,
+                   duration: Optional[float] = None,
+                   margin: Optional[float] = None,
+                   pressure: bool = True) -> list[float]:
+        """Per-stream rates to plan the next window for: the margin-scaled
+        estimate, compensated for queue pressure when backlog carries — a
+        window starting at ``t0`` that inherits a clock overrun has only
+        ``duration - overrun`` seconds to serve both its own arrivals and
+        the carried pending requests, so the plan must sustain
+        ``(rate * duration + pending) / (duration - overrun)`` to drain the
+        backlog within the window (overrun capped at 90% of the window, or
+        the required rate would explode). ``margin`` overrides the config's
+        rate margin; ``pressure=False`` skips the backlog compensation —
+        the drivers use that for the latency-budget side of an interval
+        plan, where the *true* arrival-rate estimate governs the batch-fill
+        wait once the backlog has drained."""
+        m = self.cfg.rate_margin if margin is None else float(margin)
+        rates = [m * e.estimate(r)
+                 for e, r in zip(self.estimators, announced)]
+        if (not pressure or not self.cfg.carry_backlog or self.carry is None
+                or duration is None or duration <= 0.0):
+            return rates
+        overrun = max(0.0, min(0.9 * float(duration),
+                               float(self.carry.clock) - float(t0)))
+        avail = float(duration) - overrun
+        return [(r * float(duration) + len(self.carry.pending_for(j)))
+                / avail for j, r in enumerate(rates)]
+
+    def plan_budgets(self, nominal: Sequence[float]) -> list[float]:
+        """Per-stream effective latency budgets for the next plan."""
+        return [p.effective_budget(b)
+                for p, b in zip(self.policies, nominal)]
+
+    # -- mode-switch accounting ---------------------------------------------
+    def mode_switch(self, pm) -> float:
+        """Commit to a power mode; the wall cost this window pays for
+        switching into it (0 for the first window — nothing to switch
+        from — and while the mode is unchanged)."""
+        cost = self.cfg.mode_switch_s \
+            if self.prev_pm is not None and pm != self.prev_pm else 0.0
+        self.prev_pm = pm
+        return cost
+
+    # -- engine carry-in ----------------------------------------------------
+    def window_carry_in(self, t0: float, switch_s: float) -> QueueState:
+        """The engine's carry-in for a window starting at ``t0``: the carried
+        backlog (when enabled) with the clock advanced by the mode-switch
+        cost — the engine may not serve before the switch completes."""
+        pending, ids, clock = np.empty(0), None, float(t0)
+        if self.cfg.carry_backlog and self.carry is not None:
+            pending, ids = self.carry.pending, self.carry.stream_ids
+            clock = max(float(self.carry.clock), clock)
+        return QueueState(pending, clock + float(switch_s), ids)
+
+    def observe_unserved(self, traces: Sequence, duration: float) -> None:
+        """An unsolvable window: nothing serves, but arrivals were still
+        observable (the estimators fold them in) and, with carryover
+        enabled, they queue for the next solvable window."""
+        for est, tr in zip(self.estimators, traces):
+            est.observe(tr.times, duration)
+        self.defer_window(traces)
+
+    def defer_window(self, traces: Sequence) -> None:
+        """Queue an unserved window's arrivals into the carried backlog
+        (backlogged requests do not vanish); no-op with carryover off."""
+        if not self.cfg.carry_backlog:
+            return
+        carry = self.carry if self.carry is not None \
+            else QueueState(np.empty(0), 0.0, np.empty(0, np.int64))
+        times = np.concatenate([carry.pending] + [t.times for t in traces])
+        ids = np.concatenate(
+            [carry.stream_ids if carry.stream_ids is not None
+             else np.zeros(len(carry.pending), np.int64)]
+            + [np.full(len(t), j, np.int64) for j, t in enumerate(traces)])
+        order = np.argsort(times, kind="stable")
+        self.carry = QueueState(times[order], carry.clock, ids[order])
+
+    # -- executed-window feedback -------------------------------------------
+    def observe(self, traces: Sequence, reports: Sequence,
+                nominal_budgets: Sequence[float], duration: float,
+                queue_state: Optional[QueueState]) -> None:
+        """Fold one executed window back into the state: per-stream arrival
+        observations (the window's own trace, not carried requests),
+        executed violation/tail feedback against the *nominal* budgets, and
+        the end-of-window queue state."""
+        for est, pol, tr, rep, bud in zip(self.estimators, self.policies,
+                                          traces, reports, nominal_budgets):
+            est.observe(tr.times, duration)
+            pol.update(rep.violation_rate(bud),
+                       rep.latency_quantile(self.cfg.tail_quantile), bud)
+        self.carry = queue_state

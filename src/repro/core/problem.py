@@ -289,6 +289,30 @@ def solve_infer(problem: InferProblem, obs: dict) -> Optional[Solution]:
     return best
 
 
+def solve_infer_interval(problem: InferProblem, rate_hi: float,
+                         obs: dict) -> Optional[Solution]:
+    """``solve_infer`` for a rate *interval*: the closed-loop controller
+    plans against an estimated rate (``problem.arrival_rate``, the low end)
+    but wants service headroom up to a margined ``rate_hi``. Sustainability
+    must hold at the high rate (that is where the queue would build), while
+    the latency budget — and the objective — are judged at the low rate,
+    where the batch-fill wait ``(bs-1)/alpha`` is longest. Degenerates to
+    ``solve_infer`` when ``rate_hi == arrival_rate``. Same scan order and
+    first-strict-improvement tie-break as every scalar solver here."""
+    best = None
+    for (pm, bs), (t, p) in obs.items():
+        if p > problem.power_budget:
+            continue
+        if not sustainable(bs, max(rate_hi, problem.arrival_rate), t):
+            continue
+        lam = peak_latency(bs, problem.arrival_rate, t)
+        if lam > problem.latency_budget:
+            continue
+        if best is None or lam < best.time:
+            best = Solution(pm=pm, bs=bs, time=lam, power=p)
+    return best
+
+
 def solve_concurrent(problem: ConcurrentProblem, train_obs: dict,
                      infer_obs: dict) -> Optional[Solution]:
     """Primary: arg max theta_tr s.t. lambda <= budget and max(p) <= budget.

@@ -31,6 +31,14 @@ use seeded NumPy generators and a cumulative-sum service-time kernel
 (``c = max-accumulate(ready - cumsum_prev) + cumsum``), deterministic per
 seed but not bitwise-coupled to the seed's ``random.Random`` streams.
 
+Backlog carryover (§5.4 closed loop): the managed engines accept a
+``carry_in`` ``QueueState`` — the previous window's unserved requests
+(original arrival times) plus the engine clock — and every managed report
+returns the end-of-window ``queue_state``. Replaying one long trace as K
+windows chained through queue states is *bitwise identical* on NumPy to
+replaying it in one call (the carried floats re-enter the identical
+recurrence; see ``docs/exactness.md``), and tolerance-identical on jax.
+
 Backends (contract; see ``docs/exactness.md`` for the full ladder):
 
  * ``backend="numpy"`` (default) — the **reference**: managed results are
@@ -106,6 +114,40 @@ class ArrivalTrace:
         return ArrivalTrace(self.times + t0, self.duration, self.kind,
                             self.stream_ids, self.n_streams)
 
+    def clip(self, t0: float, t1: float, rebase: bool = False) -> "ArrivalTrace":
+        """The [t0, t1) window view of this trace. Times stay absolute —
+        the carryover convention, so slicing a long trace into windows and
+        replaying them with ``QueueState`` chaining reproduces the long run
+        bitwise — unless ``rebase`` shifts them to the window origin."""
+        if t1 < t0:
+            raise ValueError(f"empty window: t1={t1} < t0={t0}")
+        m = (self.times >= t0) & (self.times < t1)
+        ids = self.stream_ids[m] if self.stream_ids is not None else None
+        return ArrivalTrace(self.times[m] - (t0 if rebase else 0.0),
+                            t1 - t0, self.kind, ids, self.n_streams)
+
+    @staticmethod
+    def concat(traces: Sequence["ArrivalTrace"],
+               duration: Optional[float] = None) -> "ArrivalTrace":
+        """Concatenate traces whose times are already in nondecreasing order
+        (e.g. carried-over pending requests followed by the next window's
+        arrivals). ``duration`` defaults to the longest piece's."""
+        if not traces:
+            return ArrivalTrace(np.empty(0), float(duration or 0.0))
+        times = np.concatenate([t.times for t in traces])
+        if times.size > 1 and np.any(np.diff(times) < 0):
+            raise ValueError("concat needs nondecreasing times across pieces;"
+                             " use merge() for interleaved streams")
+        ids = None
+        if all(t.stream_ids is not None for t in traces):
+            ids = np.concatenate([t.stream_ids for t in traces])
+        n_streams = max((t.n_streams for t in traces
+                         if t.n_streams is not None), default=None)
+        if duration is None:
+            duration = max(t.duration for t in traces)
+        return ArrivalTrace(times, float(duration), traces[0].kind,
+                            ids, n_streams)
+
     @staticmethod
     def merge(traces: Sequence["ArrivalTrace"]) -> "ArrivalTrace":
         """Merge per-stream traces into one multi-tenant trace. Stream ``j``
@@ -173,6 +215,48 @@ class ArrivalTrace:
 
 
 # ---------------------------------------------------------------------------
+# window-boundary queue state (backlog carryover)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class QueueState:
+    """Managed-engine state at a window boundary, enabling backlog carryover
+    across re-planning windows (§5.4 closed loop).
+
+    ``pending`` holds the *original* arrival timestamps of requests that were
+    never served (the trailing partial minibatch — every full minibatch is
+    always executed, even if its completion overruns the window). ``clock``
+    is the completion time of the last executed minibatch: the engine may not
+    start work before it, so an overrunning window delays the next one.
+    ``stream_ids`` aligns with ``pending`` for multi-tenant windows.
+
+    Contract (enforced by ``tests/test_controller.py``): replaying a long
+    trace as K windows chained through ``QueueState`` is bitwise identical on
+    NumPy to replaying it in one call — the carried floats re-enter the same
+    recurrence at the same positions (boundary-replay style,
+    ``docs/exactness.md``)."""
+    pending: np.ndarray
+    clock: float = 0.0
+    stream_ids: Optional[np.ndarray] = None
+
+    def __post_init__(self):
+        object.__setattr__(self, "pending",
+                           np.ascontiguousarray(self.pending, np.float64))
+        if self.stream_ids is not None:
+            object.__setattr__(self, "stream_ids",
+                               np.ascontiguousarray(self.stream_ids, np.int64))
+
+    def __len__(self) -> int:
+        return int(self.pending.size)
+
+    def pending_for(self, j: int) -> np.ndarray:
+        """Pending arrivals of stream ``j`` of a multi-tenant state."""
+        if self.stream_ids is None:
+            return self.pending if j == 0 else np.empty(0)
+        return self.pending[self.stream_ids == j]
+
+
+# ---------------------------------------------------------------------------
 # execution report
 # ---------------------------------------------------------------------------
 
@@ -184,6 +268,10 @@ class ExecutionReport:
     duration: float
     power: float
     trace: Optional[ArrivalTrace] = None   # the arrivals that were executed
+    queue_state: Optional[QueueState] = dataclasses.field(   # end-of-window
+        default=None, repr=False, compare=False)             # engine state
+    drift_s: Optional[float] = None   # runtime-vs-engine max |Δlatency| (s),
+    #                                   filled by runtime.attach_drift
     _sorted: Optional[np.ndarray] = dataclasses.field(
         default=None, init=False, repr=False, compare=False)
 
@@ -228,15 +316,24 @@ def _batch_ready(times: np.ndarray, bs: int) -> np.ndarray:
     return times[bs - 1::bs]
 
 
-def _managed_completions_var(ready: np.ndarray,
-                             exec_t: np.ndarray) -> np.ndarray:
+def _managed_completions_var(ready: np.ndarray, exec_t: np.ndarray,
+                             clock: float = 0.0) -> np.ndarray:
     """Exact batch completion times for the per-event-service recurrence
-    c_k = fl(max(c_{k-1}, ready_k) + e_k): the vectorized no-backlog
-    candidate everywhere, with backlogged runs (candidate finishing after
-    the next batch is ready) replayed by the scalar recurrence — identical
-    float ops, so bitwise-equal results."""
+    c_k = fl(max(c_{k-1}, ready_k) + e_k), started from c_0 = ``clock`` (a
+    carried-over window boundary; 0.0 for a fresh run): the vectorized
+    no-backlog candidate everywhere, with backlogged runs (candidate
+    finishing after the next batch is ready — including a carry-in clock
+    overrunning the first batches) replayed by the scalar recurrence —
+    identical float ops, so bitwise-equal results."""
     c = ready + exec_t
-    if c.size <= 1:
+    K = c.size
+    if K and clock > ready[0]:
+        prev, k = float(clock), 0
+        while k < K and prev > ready[k]:
+            prev = prev + float(exec_t[k])
+            c[k] = prev
+            k += 1
+    if K <= 1:
         return c
     bad = np.flatnonzero(c[:-1] > ready[1:])
     i, K = 0, c.size
@@ -252,10 +349,11 @@ def _managed_completions_var(ready: np.ndarray,
     return c
 
 
-def _managed_completions(ready: np.ndarray, t_in: float) -> np.ndarray:
+def _managed_completions(ready: np.ndarray, t_in: float,
+                         clock: float = 0.0) -> np.ndarray:
     """Constant-service special case (the pair engine's kernel)."""
     return _managed_completions_var(
-        ready, np.broadcast_to(np.float64(t_in), ready.shape))
+        ready, np.broadcast_to(np.float64(t_in), ready.shape), clock)
 
 
 def _fill_count_exact(start: float, ready: float, t_tr: float) -> int:
@@ -267,17 +365,18 @@ def _fill_count_exact(start: float, ready: float, t_tr: float) -> int:
 
 
 def _fill_counts(ready: np.ndarray, completions: np.ndarray,
-                 t_tr: float) -> np.ndarray:
+                 t_tr: float, clock: float = 0.0) -> np.ndarray:
     """Training minibatches filled into each batch's slack, matching the
     reference's repeated-addition loop exactly. The vectorized estimate is
     floor(slack / t_tr); only entries whose quotient sits within the
     floating-point error bound of an integer boundary — where repeated
-    addition could round the other way — are replayed exactly."""
+    addition could round the other way — are replayed exactly. ``clock`` is
+    the fill start before the first batch (a carried window boundary)."""
     if not math.isfinite(t_tr) or t_tr <= 0.0:
         return np.zeros(ready.size, np.int64)
     start = np.empty_like(ready)
     if ready.size:
-        start[0] = 0.0
+        start[0] = clock
         start[1:] = completions[:-1]
     slack = ready - start
     q = slack / t_tr
@@ -352,28 +451,46 @@ def _time_power(device: DeviceModel, w: WorkloadProfile, pm: PowerMode,
 # the three execution approaches
 # ---------------------------------------------------------------------------
 
+def _carry_times(trace: ArrivalTrace,
+                 carry_in: Optional[QueueState]) -> tuple[np.ndarray, float]:
+    """A window's effective arrival vector and starting clock: carried
+    pending requests (original timestamps) re-enter ahead of the window's
+    own arrivals, and the engine resumes from the carried clock."""
+    if carry_in is None:
+        return trace.times, 0.0
+    times = trace.times if not len(carry_in) \
+        else np.concatenate([carry_in.pending, trace.times])
+    return times, float(carry_in.clock)
+
+
 def _managed_engine(device: DeviceModel, w_tr: Optional[WorkloadProfile],
                     w_in: WorkloadProfile, pm: PowerMode, bs: int,
                     trace: ArrivalTrace, seed: int = 0,
-                    tau_cap: Optional[int] = None) -> ExecutionReport:
+                    tau_cap: Optional[int] = None,
+                    carry_in: Optional[QueueState] = None) -> ExecutionReport:
     """Fulcrum managed interleaving: one DNN at a time, switched at minibatch
     boundaries; training fills slack conservatively (never delaying the next
     inference batch). ``tau_cap`` bounds slack-fill at the plan's committed
-    tau_tr minibatches per cycle."""
+    tau_tr minibatches per cycle. ``carry_in`` resumes from a previous
+    window's queue state; the report's ``queue_state`` carries the trailing
+    partial minibatch and the engine clock out for the next window."""
     t_in, p_in = _time_power(device, w_in, pm, bs)
     t_tr, p_tr = _time_power(device, w_tr, pm, None) if w_tr \
         else (float("inf"), 0.0)
-    ready = _batch_ready(trace.times, bs)
-    c = _managed_completions(ready, t_in)
+    times, clock = _carry_times(trace, carry_in)
+    ready = _batch_ready(times, bs)
+    c = _managed_completions(ready, t_in, clock)
     trained = 0
     if w_tr:
-        fills = _fill_counts(ready, c, t_tr)
+        fills = _fill_counts(ready, c, t_tr, clock)
         if tau_cap is not None:
             fills = np.minimum(fills, max(0, int(tau_cap)))
         trained = int(fills.sum())
     power = max(p_in, p_tr if trained else 0.0)
-    return ExecutionReport("managed", _latencies(c, trace.times, bs), trained,
-                           trace.duration, power, trace)
+    state = QueueState(times[ready.size * bs:],
+                       float(c[-1]) if c.size else clock)
+    return ExecutionReport("managed", _latencies(c, times, bs), trained,
+                           trace.duration, power, trace, queue_state=state)
 
 
 def _native_engine(device: DeviceModel, w_tr: WorkloadProfile,
@@ -447,10 +564,12 @@ def _jax_engine() -> Callable:
         a_r, b_r = right
         return a_l + a_r, jnp.maximum(b_l + a_r, b_r)
 
-    def one_lane(ready, exec_t, t_tr, tau_cap):
+    def one_lane(ready, exec_t, t_tr, tau_cap, clock):
         a, b = jax.lax.associative_scan(combine, (exec_t, ready + exec_t))
-        c = jnp.maximum(a, b)
-        start = jnp.concatenate([jnp.zeros(1), c[:-1]])
+        # prefix compositions applied to c_0 = clock (the carried window
+        # boundary; 0 for a fresh run): c_k = max(clock + A_k, B_k)
+        c = jnp.maximum(clock + a, b)
+        start = jnp.concatenate([jnp.full(1, clock), c[:-1]])
         # floor estimate only — no boundary replay on-accelerator, hence the
         # jax backend's tolerance (not bitwise) contract for trained counts
         fills = jnp.clip(jnp.floor((ready - start) / t_tr), 0.0, tau_cap)
@@ -459,10 +578,11 @@ def _jax_engine() -> Callable:
 
     kernel = jax.jit(jax.vmap(one_lane))
 
-    def run(ready, exec_t, t_tr, tau_cap):
+    def run(ready, exec_t, t_tr, tau_cap, clock):
         with enable_x64():
             c, trained = kernel(jnp.asarray(ready), jnp.asarray(exec_t),
-                                jnp.asarray(t_tr), jnp.asarray(tau_cap))
+                                jnp.asarray(t_tr), jnp.asarray(tau_cap),
+                                jnp.asarray(clock))
         return np.asarray(c), np.asarray(trained)
 
     _JAX_ENGINE_CACHE["managed"] = run
@@ -502,6 +622,8 @@ class MultiTenantReport:
     duration: float
     power: float
     trace: Optional[ArrivalTrace] = None   # the merged trace that was run
+    queue_state: Optional[QueueState] = dataclasses.field(  # end-of-window
+        default=None, repr=False, compare=False)            # engine state
 
     @property
     def train_throughput(self) -> float:
@@ -512,6 +634,38 @@ class MultiTenantReport:
 
     def violation_rates(self, budgets: Sequence[float]) -> list:
         return [r.violation_rate(b) for r, b in zip(self.streams, budgets)]
+
+
+def _carry_stream_traces(traces: Sequence[ArrivalTrace],
+                         carry_in: Optional[QueueState],
+                         ) -> tuple[list[ArrivalTrace], float]:
+    """Per-stream effective traces of a multi-tenant window: each stream's
+    carried pending requests re-enter ahead of its window arrivals."""
+    if carry_in is None:
+        return list(traces), 0.0
+    out = []
+    for j, tr in enumerate(traces):
+        pend = carry_in.pending_for(j)
+        times = tr.times if pend.size == 0 \
+            else np.concatenate([pend, tr.times])
+        out.append(ArrivalTrace(times, tr.duration, tr.kind))
+    return out, float(carry_in.clock)
+
+
+def _multi_tenant_state(times_by_stream: Sequence[np.ndarray],
+                        bss: Sequence[int], completions: np.ndarray,
+                        clock: float) -> QueueState:
+    """End-of-window queue state of an N-stream run: each stream's trailing
+    partial minibatch, merged back into (time, stream) order."""
+    pend = [t[(t.size // int(b)) * int(b):]
+            for t, b in zip(times_by_stream, bss)]
+    times = np.concatenate(pend) if pend else np.empty(0)
+    ids = np.concatenate([np.full(p.size, j, np.int64)
+                          for j, p in enumerate(pend)]) \
+        if pend else np.empty(0, np.int64)
+    order = np.argsort(times, kind="stable")
+    out_clock = float(completions[-1]) if completions.size else clock
+    return QueueState(times[order], out_clock, ids[order])
 
 
 def _merge_events(traces: Sequence[ArrivalTrace], bss: Sequence[int],
@@ -537,29 +691,33 @@ def simulate_multi_tenant(device: DeviceModel,
                           pm: PowerMode, bss: Sequence[int],
                           traces: Sequence[ArrivalTrace],
                           tau_cap: Optional[int] = None,
-                          backend: Optional[str] = None) -> MultiTenantReport:
+                          backend: Optional[str] = None,
+                          carry_in: Optional[QueueState] = None,
+                          ) -> MultiTenantReport:
     """N-stream managed interleaving on one device: streams' minibatches are
     served in ready order (one DNN at a time), training fills the remaining
     slack conservatively. With one stream this is exactly the pair managed
     engine (and the seed scalar loop) — the engine's exactness contract.
-    ``backend="jax"`` routes through the batched scan engine (one lane)."""
+    ``backend="jax"`` routes through the batched scan engine (one lane).
+    ``carry_in`` resumes from a previous window's per-stream queue state."""
     n = len(stream_workloads)
     if not (len(bss) == len(traces) == n):
         raise ValueError("stream workloads / batch sizes / traces must align")
     if resolve_backend(backend) == "jax":
         return simulate_multi_tenant_batch(
             device, w_tr, [stream_workloads], [pm], [bss], [traces],
-            tau_caps=[tau_cap], backend="jax")[0]
+            tau_caps=[tau_cap], carry_ins=[carry_in], backend="jax")[0]
     tps = [_time_power(device, w, pm, int(b))
            for w, b in zip(stream_workloads, bss)]
     t_ins = [t for t, _ in tps]
     t_tr, p_tr = _time_power(device, w_tr, pm, None) if w_tr \
         else (float("inf"), 0.0)
-    ready, exec_t, sid = _merge_events(traces, bss, t_ins)
-    c = _managed_completions_var(ready, exec_t)
+    eff_traces, clock = _carry_stream_traces(traces, carry_in)
+    ready, exec_t, sid = _merge_events(eff_traces, bss, t_ins)
+    c = _managed_completions_var(ready, exec_t, clock)
     trained = 0
     if w_tr:
-        fills = _fill_counts(ready, c, t_tr)
+        fills = _fill_counts(ready, c, t_tr, clock)
         if tau_cap is not None:
             fills = np.minimum(fills, max(0, int(tau_cap)))
         trained = int(fills.sum())
@@ -568,13 +726,16 @@ def simulate_multi_tenant(device: DeviceModel,
         power = max(power, p_in)
     duration = max((tr.duration for tr in traces), default=0.0)
     reports = []
-    for j, (tr, b) in enumerate(zip(traces, bss)):
+    for j, (tr, b) in enumerate(zip(eff_traces, bss)):
         comp_j = c[sid == j]
         lat = np.repeat(comp_j, int(b)) - tr.times[:comp_j.size * int(b)]
         reports.append(ExecutionReport("managed", lat, 0, tr.duration,
                                        power, tr))
+    state = _multi_tenant_state([tr.times for tr in eff_traces], bss, c,
+                                clock)
     return MultiTenantReport(reports, trained, duration, power,
-                             ArrivalTrace.merge(traces))
+                             ArrivalTrace.merge(eff_traces),
+                             queue_state=state)
 
 
 def simulate_multi_tenant_batch(
@@ -583,20 +744,26 @@ def simulate_multi_tenant_batch(
         pms: Sequence[PowerMode], bsss: Sequence[Sequence[int]],
         tracess: Sequence[Sequence[ArrivalTrace]],
         tau_caps: Optional[Sequence[Optional[int]]] = None,
-        backend: Optional[str] = None) -> list[MultiTenantReport]:
+        backend: Optional[str] = None,
+        carry_ins: Optional[Sequence[Optional[QueueState]]] = None,
+        ) -> list[MultiTenantReport]:
     """Run many N-stream managed simulations as one batch (one lane per
     multi-tenant run; lanes may have *different* tenant counts — the merged
     event axis is padded per lane, so a 2-tenant and a 4-tenant run share
     one vmapped program). Per-stream event merging (stable time sort, ties
     by stream index) happens host-side exactly as the NumPy engine does;
     only the scan arithmetic differs on jax. All reports across all lanes
-    and streams share one vectorized report-builder pass."""
+    and streams share one vectorized report-builder pass. ``carry_ins``
+    gives each lane a carried per-stream ``QueueState``."""
     n = len(pms)
     if not (len(stream_workloads) == len(bsss) == len(tracess) == n):
         raise ValueError("stream_workloads / pms / bsss / tracess must align")
     caps = list(tau_caps) if tau_caps is not None else [None] * n
     if len(caps) != n:
         raise ValueError("tau_caps must align with the lanes")
+    carries = list(carry_ins) if carry_ins is not None else [None] * n
+    if len(carries) != n:
+        raise ValueError("carry_ins must align with the lanes")
     if n == 0:
         return []
     backend = resolve_backend(backend)
@@ -604,44 +771,50 @@ def simulate_multi_tenant_batch(
         # pass the resolved backend through: a default (env-var) jax
         # request must not bounce each lane back into the jax path
         reports = [simulate_multi_tenant(device, w_tr, ws, pm, bss, traces,
-                                         tau_cap=cap, backend="numpy")
-                   for ws, pm, bss, traces, cap
-                   in zip(stream_workloads, pms, bsss, tracess, caps)]
+                                         tau_cap=cap, backend="numpy",
+                                         carry_in=ci)
+                   for ws, pm, bss, traces, cap, ci
+                   in zip(stream_workloads, pms, bsss, tracess, caps,
+                          carries)]
         _presort_reports([r for mt in reports for r in mt.streams])
         return reports
     lanes = []
-    for ws, pm, bss, traces, cap in zip(stream_workloads, pms, bsss,
-                                        tracess, caps):
+    for ws, pm, bss, traces, cap, ci in zip(stream_workloads, pms, bsss,
+                                            tracess, caps, carries):
         if not (len(ws) == len(bss) == len(traces)):
             raise ValueError("stream workloads / batch sizes / traces "
                              "must align")
         tps = [_time_power(device, w, pm, int(b)) for w, b in zip(ws, bss)]
         ttr = _time_power(device, w_tr, pm, None) if w_tr else (np.inf, 0.0)
-        ready, exec_t, sid = _merge_events(traces, bss, [t for t, _ in tps])
-        lanes.append((tps, ttr, ready, exec_t, sid))
+        eff, clock = _carry_stream_traces(traces, ci)
+        ready, exec_t, sid = _merge_events(eff, bss, [t for t, _ in tps])
+        lanes.append((tps, ttr, ready, exec_t, sid, eff, clock))
     ready, exec_t = _pad_lanes([ln[2] for ln in lanes],
                                [ln[3] for ln in lanes])
     c, trained_f = _jax_engine()(ready, exec_t,
                                  np.array([ln[1][0] for ln in lanes]),
-                                 _tau_array(caps))
+                                 _tau_array(caps),
+                                 np.array([ln[6] for ln in lanes]))
     out, flat = [], []
-    for i, (tps, ttr, ready_i, _, sid) in enumerate(lanes):
+    for i, (tps, ttr, ready_i, _, sid, eff, clock) in enumerate(lanes):
         comp = c[i, :ready_i.size]
         trained = int(round(float(trained_f[i]))) if w_tr else 0
         power = ttr[1] if trained else 0.0
         for _, p_in in tps:
             power = max(power, p_in)
-        traces = tracess[i]
-        duration = max((tr.duration for tr in traces), default=0.0)
+        duration = max((tr.duration for tr in tracess[i]), default=0.0)
         streams = []
-        for j, (tr, b) in enumerate(zip(traces, bsss[i])):
+        for j, (tr, b) in enumerate(zip(eff, bsss[i])):
             comp_j = comp[sid == j]
             lat = np.repeat(comp_j, int(b)) - tr.times[:comp_j.size * int(b)]
             streams.append(ExecutionReport("managed", lat, 0, tr.duration,
                                            power, tr))
         flat.extend(streams)
+        state = _multi_tenant_state([tr.times for tr in eff], bsss[i], comp,
+                                    clock)
         out.append(MultiTenantReport(streams, trained, duration, power,
-                                     ArrivalTrace.merge(traces)))
+                                     ArrivalTrace.merge(eff),
+                                     queue_state=state))
     _presort_reports(flat)
     return out
 
@@ -650,22 +823,31 @@ def simulate(device: DeviceModel, w_tr: Optional[WorkloadProfile],
              w_in: WorkloadProfile, pm: PowerMode, bs: int,
              trace: ArrivalTrace, approach: str = "managed", seed: int = 0,
              tau_cap: Optional[int] = None,
-             backend: Optional[str] = None) -> ExecutionReport:
+             backend: Optional[str] = None,
+             carry_in: Optional[QueueState] = None) -> ExecutionReport:
     """Run one execution approach over an arrival trace.
 
     ``backend`` selects the engine implementation for the deterministic
     managed kernel: ``"numpy"`` (the reference) or ``"jax"`` (max-plus scan);
     ``None`` resolves via ``core.backend.resolve_backend``. The stochastic
-    native/streams models always run on NumPy."""
+    native/streams models always run on NumPy. ``carry_in`` (managed only)
+    resumes from a previous window's ``QueueState``."""
     try:
         engine = ENGINES[approach]
     except KeyError:
         raise ValueError(f"unknown approach {approach!r}; "
                          f"use one of {sorted(ENGINES)}") from None
+    if carry_in is not None and approach != "managed":
+        raise ValueError("carry-in backlog is only defined for the "
+                         "deterministic managed approach")
     backend = resolve_backend(backend)
     if backend == "jax" and approach == "managed":
         return simulate_batch(device, w_tr, w_in, [pm], [bs], [trace],
-                              tau_caps=[tau_cap], backend="jax")[0]
+                              tau_caps=[tau_cap], carry_ins=[carry_in],
+                              backend="jax")[0]
+    if approach == "managed":
+        return engine(device, w_tr, w_in, pm, bs, trace, seed, tau_cap,
+                      carry_in)
     return engine(device, w_tr, w_in, pm, bs, trace, seed, tau_cap)
 
 
@@ -674,7 +856,9 @@ def simulate_batch(device: DeviceModel, w_tr: Optional[WorkloadProfile],
                    bss: Sequence[int], traces: Sequence[ArrivalTrace],
                    tau_caps: Optional[Sequence[Optional[int]]] = None,
                    approach: str = "managed", seed: int = 0,
-                   backend: Optional[str] = None) -> list[ExecutionReport]:
+                   backend: Optional[str] = None,
+                   carry_ins: Optional[Sequence[Optional[QueueState]]] = None,
+                   ) -> list[ExecutionReport]:
     """Run many (power mode, batch size, trace) simulations as one batch.
 
     One report per lane. On ``backend="jax"`` all managed lanes run as a
@@ -682,41 +866,59 @@ def simulate_batch(device: DeviceModel, w_tr: Optional[WorkloadProfile],
     count); on NumPy the per-lane kernels run in a loop. Either way the
     reports' quantile/violation caches are filled by the vectorized report
     builder. Only the managed approach is deterministic enough to batch on
-    jax; native/streams lanes always use the seeded NumPy models."""
+    jax; native/streams lanes always use the seeded NumPy models.
+    ``carry_ins`` (managed only) gives each lane a carried ``QueueState``."""
     n = len(pms)
     if not (len(bss) == len(traces) == n):
         raise ValueError("pms / bss / traces must align")
     caps = list(tau_caps) if tau_caps is not None else [None] * n
     if len(caps) != n:
         raise ValueError("tau_caps must align with the lanes")
+    carries = list(carry_ins) if carry_ins is not None else [None] * n
+    if len(carries) != n:
+        raise ValueError("carry_ins must align with the lanes")
+    if approach != "managed" and any(ci is not None for ci in carries):
+        raise ValueError("carry-in backlog is only defined for the "
+                         "deterministic managed approach")
     if n == 0:
         return []
     backend = resolve_backend(backend)
     if backend == "numpy" or approach != "managed":
         engine = ENGINES[approach]
-        reports = [engine(device, w_tr, w_in, pm, int(bs), tr, seed, cap)
-                   for pm, bs, tr, cap in zip(pms, bss, traces, caps)]
+        if approach == "managed":
+            reports = [engine(device, w_tr, w_in, pm, int(bs), tr, seed, cap,
+                              ci)
+                       for pm, bs, tr, cap, ci
+                       in zip(pms, bss, traces, caps, carries)]
+        else:
+            reports = [engine(device, w_tr, w_in, pm, int(bs), tr, seed, cap)
+                       for pm, bs, tr, cap in zip(pms, bss, traces, caps)]
         _presort_reports(reports)
         return reports
     tps = [_time_power(device, w_in, pm, int(bs)) for pm, bs in zip(pms, bss)]
     ttr = [_time_power(device, w_tr, pm, None) if w_tr else (np.inf, 0.0)
            for pm in pms]
-    readies = [_batch_ready(tr.times, int(bs))
-               for tr, bs in zip(traces, bss)]
+    lane_times = [_carry_times(tr, ci) for tr, ci in zip(traces, carries)]
+    readies = [_batch_ready(times, int(bs))
+               for (times, _), bs in zip(lane_times, bss)]
     execs = [np.broadcast_to(np.float64(t), r.shape)
              for (t, _), r in zip(tps, readies)]
     ready, exec_t = _pad_lanes(readies, execs)
     c, trained_f = _jax_engine()(ready, exec_t,
                                  np.array([t for t, _ in ttr]),
-                                 _tau_array(caps))
+                                 _tau_array(caps),
+                                 np.array([cl for _, cl in lane_times]))
     reports = []
     for i, (tr, bs) in enumerate(zip(traces, bss)):
         comp = c[i, :readies[i].size]
+        times, clock = lane_times[i]
         trained = int(round(float(trained_f[i]))) if w_tr else 0
         power = max(tps[i][1], ttr[i][1] if trained else 0.0)
+        state = QueueState(times[comp.size * int(bs):],
+                           float(comp[-1]) if comp.size else clock)
         reports.append(ExecutionReport(
-            "managed", _latencies(comp, tr.times, int(bs)), trained,
-            tr.duration, power, tr))
+            "managed", _latencies(comp, times, int(bs)), trained,
+            tr.duration, power, tr, queue_state=state))
     _presort_reports(reports)
     return reports
 
@@ -729,13 +931,14 @@ def simulate_batch(device: DeviceModel, w_tr: Optional[WorkloadProfile],
 
 def managed_scalar(device: DeviceModel, w_tr: Optional[WorkloadProfile],
                    w_in: WorkloadProfile, pm: PowerMode, bs: int,
-                   trace: ArrivalTrace,
-                   tau_cap: Optional[int] = None) -> ExecutionReport:
+                   trace: ArrivalTrace, tau_cap: Optional[int] = None,
+                   carry_in: Optional[QueueState] = None) -> ExecutionReport:
     t_in, p_in = device.time_power(w_in, pm, bs)
     t_tr, p_tr = device.time_power(w_tr, pm) if w_tr else (float("inf"), 0.0)
-    arrivals = trace.times.tolist()
+    times, clock = _carry_times(trace, carry_in)
+    arrivals = times.tolist()
     latencies: list[float] = []
-    now, trained, i = 0.0, 0, 0
+    now, trained, i = clock, 0, 0
     while i + bs <= len(arrivals):
         batch_ready = arrivals[i + bs - 1]
         filled = 0
@@ -750,29 +953,44 @@ def managed_scalar(device: DeviceModel, w_tr: Optional[WorkloadProfile],
         i += bs
     power = max(p_in, p_tr if trained else 0.0)
     return ExecutionReport("managed", latencies, trained, trace.duration,
-                           power, trace)
+                           power, trace,
+                           queue_state=QueueState(times[i:], now))
 
 
-def multi_tenant_scalar(device: DeviceModel, w_tr: Optional[WorkloadProfile],
-                        stream_workloads: Sequence[WorkloadProfile],
-                        pm: PowerMode, bss: Sequence[int],
-                        traces: Sequence[ArrivalTrace],
-                        tau_cap: Optional[int] = None) -> MultiTenantReport:
-    """Scalar reference for the N-stream managed engine: replay every
-    batch-ready event in (time, stream) order with the seed loop's float
-    ops. One stream degenerates to ``managed_scalar``."""
-    tps = [device.time_power(w, pm, int(b))
-           for w, b in zip(stream_workloads, bss)]
-    t_tr, p_tr = device.time_power(w_tr, pm) if w_tr else (float("inf"), 0.0)
-    arrivals = [tr.times.tolist() for tr in traces]
+def batch_ready_events(arrivals: Sequence[Sequence[float]],
+                       bss: Sequence[int]) -> list[tuple]:
+    """Per-stream batch-ready events merged into device order: one
+    ``(ready time, stream index, start request index)`` tuple per full
+    minibatch, sorted by ready time with ties broken by stream then
+    position — the managed engines' merge order. Shared by the scalar
+    reference and the real runtime so their replay order cannot drift."""
     events = []
     for j, (arr, b) in enumerate(zip(arrivals, bss)):
         b = int(b)
         for k in range(len(arr) // b):
             events.append((arr[k * b + b - 1], j, k * b))
     events.sort()
+    return events
+
+
+def multi_tenant_scalar(device: DeviceModel, w_tr: Optional[WorkloadProfile],
+                        stream_workloads: Sequence[WorkloadProfile],
+                        pm: PowerMode, bss: Sequence[int],
+                        traces: Sequence[ArrivalTrace],
+                        tau_cap: Optional[int] = None,
+                        carry_in: Optional[QueueState] = None,
+                        ) -> MultiTenantReport:
+    """Scalar reference for the N-stream managed engine: replay every
+    batch-ready event in (time, stream) order with the seed loop's float
+    ops. One stream degenerates to ``managed_scalar``."""
+    tps = [device.time_power(w, pm, int(b))
+           for w, b in zip(stream_workloads, bss)]
+    t_tr, p_tr = device.time_power(w_tr, pm) if w_tr else (float("inf"), 0.0)
+    eff_traces, clock = _carry_stream_traces(traces, carry_in)
+    arrivals = [tr.times.tolist() for tr in eff_traces]
+    events = batch_ready_events(arrivals, bss)
     latencies: list[list[float]] = [[] for _ in stream_workloads]
-    now, trained = 0.0, 0
+    now, trained = clock, 0
     for ready, j, start in events:
         filled = 0
         while w_tr and now + t_tr <= ready \
@@ -789,9 +1007,13 @@ def multi_tenant_scalar(device: DeviceModel, w_tr: Optional[WorkloadProfile],
         power = max(power, p_in)
     duration = max((tr.duration for tr in traces), default=0.0)
     reports = [ExecutionReport("managed", lat, 0, tr.duration, power, tr)
-               for lat, tr in zip(latencies, traces)]
+               for lat, tr in zip(latencies, eff_traces)]
+    state = _multi_tenant_state(
+        [tr.times for tr in eff_traces], bss,
+        np.asarray([now] if events else [], np.float64), clock)
     return MultiTenantReport(reports, trained, duration, power,
-                             ArrivalTrace.merge(traces))
+                             ArrivalTrace.merge(eff_traces),
+                             queue_state=state)
 
 
 def native_scalar(device: DeviceModel, w_tr: WorkloadProfile,

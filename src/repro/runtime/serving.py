@@ -8,7 +8,6 @@
 from __future__ import annotations
 
 import dataclasses
-import time
 from collections import deque
 from typing import Callable, Optional
 
@@ -18,6 +17,7 @@ import numpy as np
 
 from repro.configs.base import make_batch
 from repro.models import model as M
+from repro.runtime.clock import Clock, WallClock
 
 
 @dataclasses.dataclass
@@ -32,13 +32,17 @@ class Request:
 
 
 class RequestQueue:
-    """Arrival-stamped FIFO; supports synthetic constant/trace-driven feeds."""
+    """Arrival-stamped FIFO; supports synthetic constant/trace-driven feeds.
+    Arrival stamps come from the injectable ``clock`` (deterministic under a
+    ``FakeClock``) unless an explicit ``now`` is given."""
 
-    def __init__(self):
+    def __init__(self, clock: Optional[Clock] = None):
         self.q: deque[Request] = deque()
+        self.clock = clock if clock is not None else WallClock()
 
     def push(self, payload: dict, now: Optional[float] = None):
-        self.q.append(Request(now if now is not None else time.time(), payload))
+        self.q.append(Request(now if now is not None else self.clock.now(),
+                              payload))
 
     def ready(self, bs: int) -> bool:
         return len(self.q) >= bs
@@ -53,8 +57,10 @@ class RequestQueue:
 class BatchInferenceServer:
     """One jitted forward per minibatch of bs requests."""
 
-    def __init__(self, cfg: M.ModelConfig, seq_len: int, bs: int, seed: int = 0):
+    def __init__(self, cfg: M.ModelConfig, seq_len: int, bs: int,
+                 seed: int = 0, clock: Optional[Clock] = None):
         self.cfg, self.seq_len, self.bs = cfg, seq_len, bs
+        self.clock = clock if clock is not None else WallClock()
         self.params = M.init_params(jax.random.key(seed), cfg)
         self._fwd = jax.jit(lambda p, b: M.forward(p, b, cfg)[0])
         # warm the compile cache
@@ -65,10 +71,10 @@ class BatchInferenceServer:
         return self._fwd(self.params, batch)
 
     def minibatch_time(self, iters: int = 3) -> float:
-        t0 = time.time()
+        t0 = self.clock.now()
         for _ in range(iters):
             self.infer().block_until_ready()
-        return (time.time() - t0) / iters
+        return (self.clock.now() - t0) / iters
 
 
 class GenerationServer:

@@ -2,7 +2,6 @@
 from __future__ import annotations
 
 import dataclasses
-import time
 from pathlib import Path
 from typing import Optional
 
@@ -14,6 +13,7 @@ from repro.data.pipeline import ShardedPrefetcher, SyntheticTokenSource
 from repro.models import model as M
 from repro.optim.adamw import AdamWConfig, init_opt_state
 from repro.launch.steps import make_train_step
+from repro.runtime.clock import Clock, WallClock
 
 
 @dataclasses.dataclass
@@ -38,10 +38,12 @@ class Trainer:
 
     def __init__(self, cfg: M.ModelConfig, batch: int, seq_len: int,
                  opt_cfg: AdamWConfig = AdamWConfig(), seed: int = 0,
-                 ckpt_path: Optional[str] = None):
+                 ckpt_path: Optional[str] = None,
+                 clock: Optional[Clock] = None):
         self.cfg, self.batch, self.seq_len = cfg, batch, seq_len
         self.opt_cfg = opt_cfg
         self.ckpt_path = ckpt_path
+        self.clock = clock if clock is not None else WallClock()
         self.params = M.init_params(jax.random.key(seed), cfg)
         self.opt_state = init_opt_state(self.params)
         self.step_fn = jax.jit(make_train_step(cfg, opt_cfg), donate_argnums=(0, 1))
@@ -54,16 +56,24 @@ class Trainer:
             (self.params, self.opt_state), self.step = restore_checkpoint(
                 self.ckpt_path, (self.params, self.opt_state))
 
+    def step_minibatch(self) -> None:
+        """One optimizer step on the next data batch — the unit the managed
+        interleave runtime schedules into inference slack."""
+        batch = next(self.data)
+        self.params, self.opt_state, _ = self.step_fn(
+            self.params, self.opt_state, batch)
+        self.step += 1
+
     def train(self, num_steps: int, log_every: int = 10,
               ckpt_every: int = 0) -> TrainReport:
         losses, times = [], []
         for _ in range(num_steps):
             batch = next(self.data)
-            t0 = time.time()
+            t0 = self.clock.now()
             self.params, self.opt_state, metrics = self.step_fn(
                 self.params, self.opt_state, batch)
             loss = float(metrics["loss"])
-            times.append(time.time() - t0)
+            times.append(self.clock.now() - t0)
             losses.append(loss)
             self.step += 1
             if log_every and self.step % log_every == 0:
@@ -80,10 +90,10 @@ class Trainer:
             batch = next(self.data)
             self.params, self.opt_state, _ = self.step_fn(
                 self.params, self.opt_state, batch)
-        t0 = time.time()
+        t0 = self.clock.now()
         for _ in range(iters):
             batch = next(self.data)
             self.params, self.opt_state, _ = self.step_fn(
                 self.params, self.opt_state, batch)
         jax.block_until_ready(self.params)
-        return (time.time() - t0) / iters
+        return (self.clock.now() - t0) / iters
