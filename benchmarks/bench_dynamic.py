@@ -71,6 +71,28 @@ CLOSED_LOOP_CONFIGS = {
 }
 CLOSED_LOOP_ARRIVALS = ("uniform", "poisson")
 
+# Burst-survival matrix (§5.4 admission control): estimator x admission
+# mode x arrival model, snapshotting the goodput-vs-violation tradeoff.
+# "none" under the ewma estimator is *the same config* as the closed-loop
+# "ewma" row — the byte-identity anchor (--check) proving the admission
+# machinery is inert when off. "shed" drops requests the committed plan
+# provably cannot serve within budget (deadline-drop against the engine's
+# own recurrence, so admitted-request satisfaction is exact by
+# construction); "defer" re-offers them at the next window start instead.
+ADMISSION_ESTIMATORS = ("oracle", "ewma")
+ADMISSION_MODES = ("none", "shed", "defer")
+
+
+def _admission_config(estimator: str, mode: str) -> ControllerConfig:
+    base = dict(carry_backlog=True) if estimator == "oracle" \
+        else dict(_EWMA)
+    knobs = {}
+    if mode != "none":
+        knobs = dict(admission=mode, burst_quantile=0.95)
+        if mode == "defer":
+            knobs["defer_cap"] = 2000
+    return ControllerConfig(**base, **knobs)
+
 
 def make_traces(windows: int = 24) -> dict[str, list[float]]:
     rng = random.Random(42)
@@ -152,7 +174,127 @@ def _closed_loop_rows(traces: dict, dnns, records: dict) -> list[str]:
     return rows
 
 
-def run(full: bool = False, dnns=None, closed_loop: bool = True) -> list[str]:
+def _admission_rows(traces: dict, dnns, records: dict) -> list[str]:
+    """The burst-survival sweep: every (dnn, trace, arrival model) served
+    under the estimator x admission-mode matrix, recording admitted-request
+    violation, per-window satisfaction on admitted requests, goodput
+    against offered load, and the shed/deferred/split counters."""
+    rows = []
+    agg: dict[tuple, list] = {
+        (a, e, m): [0, 0, 0.0, 0, 0, 0]   # sat, wins, good, offered,
+        for a in CLOSED_LOOP_ARRIVALS     # shed, deferred
+        for e in ADMISSION_ESTIMATORS for m in ADMISSION_MODES}
+    for name in dnns:
+        w = INFER_WORKLOADS[name]
+        f = Fulcrum(DEV, SPACE, QuadrantRanges((0.05, 1.0), (30.0, 90.0)),
+                    nn_epochs=NN_EPOCHS)
+        for trace_name, rates in traces.items():
+            for arrivals in CLOSED_LOOP_ARRIVALS:
+                for est in ADMISSION_ESTIMATORS:
+                    for mode in ADMISSION_MODES:
+                        cfg = _admission_config(est, mode)
+                        wins = f.serve_dynamic(
+                            w, POWER, LATENCY, rates, "gmd",
+                            window_duration=WINDOW_S, arrivals=arrivals,
+                            seed=7, controller=cfg)
+                        lats = np.concatenate(
+                            [np.asarray(wr.report.latencies, np.float64)
+                             for wr in wins if wr.report is not None]
+                            or [np.empty(0)])
+                        ag = ExecutionReport("managed", lats, 0, 1.0, 0.0)
+                        sat = [wr.report is not None
+                               and wr.report.violation_rate(LATENCY)
+                               <= SATISFIED_VIOL for wr in wins]
+                        offered = sum(wr.offered_requests for wr in wins)
+                        good = sum(wr.goodput * wr.offered_requests
+                                   for wr in wins
+                                   if wr.goodput is not None)
+                        shed = sum(wr.shed_requests for wr in wins)
+                        deferred = sum(wr.deferred_requests for wr in wins)
+                        rec = {
+                            "viol_pct": 100.0 * ag.violation_rate(LATENCY),
+                            "p95_ms": 1e3 * ag.latency_quantile(0.95),
+                            "satisfied_frac": sum(sat) / len(wins),
+                            "goodput_frac": good / offered if offered
+                            else 1.0,
+                            "offered_requests": offered,
+                            "served_requests": int(lats.size),
+                            "shed_requests": shed,
+                            "deferred_requests": deferred,
+                            "splits": sum(wr.splits for wr in wins),
+                            "windows": len(wins),
+                            "configs": len(wins),
+                        }
+                        records[f"admission/{name}/{trace_name}/{arrivals}/"
+                                f"{est}_{mode}"] = rec
+                        a = agg[(arrivals, est, mode)]
+                        a[0] += sum(sat)
+                        a[1] += len(wins)
+                        a[2] += good
+                        a[3] += offered
+                        a[4] += shed
+                        a[5] += deferred
+                        rows.append(row(
+                            f"dynamic_admission/{name}/{trace_name}/"
+                            f"{arrivals}/{est}_{mode}/goodput_frac",
+                            rec["goodput_frac"],
+                            f"sat={rec['satisfied_frac']:.3f};"
+                            f"viol={rec['viol_pct']:.2f}%;"
+                            f"shed={shed};deferred={deferred}"))
+    for (arrivals, est, mode), (s, n, g, o, sh, df) in agg.items():
+        records[f"admission_summary/{arrivals}/{est}_{mode}"] = {
+            "satisfied_frac": s / n if n else float("nan"),
+            "goodput_frac": g / o if o else 1.0,
+            "shed_requests": sh, "deferred_requests": df,
+            "windows": n, "configs": n}
+        rows.append(row(
+            f"dynamic_admission/summary/{arrivals}/{est}_{mode}",
+            g / o if o else 1.0,
+            f"sat={s / n if n else float('nan'):.3f};windows={n}"))
+    return rows
+
+
+def check(records: dict) -> list[str]:
+    """CI acceptance gates (issue 6): Poisson admitted-request budget
+    satisfaction >= 0.90 with goodput >= 0.70 of offered load under
+    shedding, and the admission-"none" rows byte-identical to the
+    admission-free closed-loop rows (the machinery is inert when off).
+    Returns a list of failure strings (empty == pass)."""
+    fails = []
+    for est in ADMISSION_ESTIMATORS:
+        key = f"admission_summary/poisson/{est}_shed"
+        rec = records.get(key)
+        if rec is None:
+            fails.append(f"missing {key}")
+            continue
+        if rec["satisfied_frac"] < 0.90:
+            fails.append(f"{key}: satisfied_frac "
+                         f"{rec['satisfied_frac']:.3f} < 0.90")
+        if rec["goodput_frac"] < 0.70:
+            fails.append(f"{key}: goodput_frac "
+                         f"{rec['goodput_frac']:.3f} < 0.70")
+    anchors = 0
+    for key, rec in records.items():
+        if not key.startswith("admission/") \
+                or not key.endswith("/ewma_none"):
+            continue
+        base_key = key.replace("admission/", "closed_loop/") \
+                      .replace("/ewma_none", "/ewma")
+        base = records.get(base_key)
+        if base is None:
+            continue
+        anchors += 1
+        for field in ("viol_pct", "p95_ms", "satisfied_frac"):
+            if rec[field] != base[field]:
+                fails.append(f"{key}.{field}={rec[field]!r} != "
+                             f"{base_key}.{field}={base[field]!r}")
+    if anchors == 0:
+        fails.append("no ewma_none byte-identity anchors found")
+    return fails
+
+
+def run(full: bool = False, dnns=None, closed_loop: bool = True,
+        do_check: bool = False) -> list[str]:
     rows = []
     # a restricted DNN subset (e.g. the --quick CI sweep) snapshots to a
     # side file so it can never clobber the committed full-sweep snapshot,
@@ -212,8 +354,17 @@ def run(full: bool = False, dnns=None, closed_loop: bool = True) -> list[str]:
     records: dict = {"rows": list(rows)}
     if closed_loop:
         rows += _closed_loop_rows(traces, dnns, records)
+        rows += _admission_rows(traces, dnns, records)
     total = sum(len(rates) for rates in traces.values()) * len(dnns)
     snapshot(path, records, configs=total)
+    if do_check:
+        fails = check(records)
+        for fl in fails:
+            print(f"CHECK FAIL: {fl}")
+        if fails:
+            raise SystemExit(1)
+        print(f"check passed: poisson shed satisfaction >= 0.90, "
+              f"goodput >= 0.70, admission-off rows byte-identical")
     return rows
 
 
@@ -223,7 +374,12 @@ if __name__ == "__main__":
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--quick", action="store_true",
                     help="2-DNN sweep (CI-sized)")
+    ap.add_argument("--check", action="store_true",
+                    help="assert the burst-survival acceptance gates "
+                         "(poisson shed satisfaction/goodput, admission-"
+                         "off byte-identity)")
     args = ap.parse_args()
     for r in run(full=args.full,
-                 dnns=["mobilenet", "lstm"] if args.quick else None):
+                 dnns=["mobilenet", "lstm"] if args.quick else None,
+                 do_check=args.check):
         print(r)

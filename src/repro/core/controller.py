@@ -46,6 +46,7 @@ import numpy as np
 from repro.core.simulate import QueueState
 
 _ESTIMATORS = ("oracle", "ewma")
+_ADMISSIONS = ("none", "shed", "defer", "degrade-bs")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -71,6 +72,17 @@ class ControllerConfig:
     min_budget_scale: float = 0.2    # effective budget floor (x nominal)
     mode_switch_s: float = 0.0       # wall cost charged when the pm changes
     carry_backlog: bool = False      # chain QueueState across windows
+    # -- burst survival (admission control + mid-window re-planning) --------
+    admission: str = "none"          # AdmissionPolicy mode (see _ADMISSIONS)
+    admission_headroom: float = 1.0  # admit against headroom * nominal budget
+    burst_quantile: float = 0.0      # plan service headroom at the window's
+    #   Poisson arrival-count quantile (0 = plan at the mean-rate estimate)
+    split_backlog: Optional[int] = None   # re-enter the controller when the
+    #   backlog crosses this mid-window (None = window boundaries only)
+    max_splits: int = 2              # re-planning splits per window, at most
+    defer_cap: Optional[int] = None  # max deferred backlog (overflow is shed)
+    priorities: Optional[tuple] = None    # per-stream admission priorities
+    #   (multi-tenant hook: lower-priority streams shed earlier)
 
     def __post_init__(self):
         if self.rate_estimator not in _ESTIMATORS:
@@ -86,13 +98,217 @@ class ControllerConfig:
             raise ValueError("min_budget_scale must be in (0, 1]")
         if self.mode_switch_s < 0.0:
             raise ValueError("mode_switch_s must be >= 0")
+        if self.admission not in _ADMISSIONS:
+            raise ValueError(f"unknown admission mode {self.admission!r}; "
+                             f"use {_ADMISSIONS}")
+        if self.admission_headroom <= 0.0:
+            raise ValueError("admission_headroom must be positive")
+        if not 0.0 <= self.burst_quantile < 1.0:
+            raise ValueError("burst_quantile must be in [0, 1)")
+        if self.split_backlog is not None and self.split_backlog <= 0:
+            raise ValueError("split_backlog must be positive (or None)")
+        if self.max_splits < 0:
+            raise ValueError("max_splits must be >= 0")
+        if self.defer_cap is not None and self.defer_cap < 0:
+            raise ValueError("defer_cap must be >= 0 (or None)")
+        if self.priorities is not None:
+            pr = tuple(float(p) for p in self.priorities)
+            if not pr or any(p <= 0.0 for p in pr):
+                raise ValueError("priorities must be positive floats")
+            object.__setattr__(self, "priorities", pr)
 
     @property
     def closed_loop(self) -> bool:
         """True when any knob makes window k+1 depend on window k."""
         return (self.rate_estimator != "oracle" or self.rate_margin != 1.0
                 or self.feedback or self.carry_backlog
-                or self.mode_switch_s > 0.0)
+                or self.mode_switch_s > 0.0
+                or self.admission != "none" or self.burst_quantile > 0.0
+                or self.split_backlog is not None)
+
+    def admission_policy(self) -> "AdmissionPolicy":
+        """The config's admission knobs bundled for the serving drivers."""
+        return AdmissionPolicy(self.admission, self.admission_headroom,
+                               self.priorities)
+
+
+# ---------------------------------------------------------------------------
+# SLO-aware admission control (§5.4 burst survival)
+# ---------------------------------------------------------------------------
+
+def _admit_mask(times: np.ndarray, budgets: np.ndarray, bs: int, t_in: float,
+                clock: float) -> np.ndarray:
+    """Deadline-drop admission over one window's effective arrivals (carried
+    pending requests first, then the window's own — exactly the vector the
+    managed engine would run). A virtual copy of the engine runs the same
+    recurrence over the *admitted* subsequence: ``clock`` is when the device
+    frees up, ``batch`` the forming minibatch's member indices. Whenever the
+    batch fills, its completion is ``max(clock, ready) + t_in`` — the
+    engine's own fold — and the oldest members whose wait already exceeds
+    their budget are dropped (deadline-expired work is shed rather than
+    served late, the classic load-shedding rule, implementable online
+    because a member's deadline passes *before* the batch it slows down
+    commits). Dropping re-opens the batch, so the next arrival both refills
+    it and re-times it; the batch only commits when every member meets its
+    budget. The admitted subsequence therefore replays through the engine
+    with zero violations by construction — identical recurrence, identical
+    float64 ops — and on an uncongested feasible window nothing drops.
+
+    Rejected requests never occupy a batch slot: admission is what keeps
+    the virtual queue inside the budget, which is why admitted-request
+    satisfaction holds even when the offered load cannot drain. A trailing
+    partial batch is admitted untouched — the engine carries it to the next
+    window, where the next admission pass re-judges it as backlog."""
+    times = np.asarray(times, np.float64)
+    n = times.size
+    admit = np.ones(n, bool)
+    if n == 0:
+        return admit
+    budgets = np.asarray(budgets, np.float64)
+    c = float(clock)
+    bs, t_in = int(bs), float(t_in)
+    batch: list[int] = []
+    for i in range(n):
+        batch.append(i)
+        if len(batch) < bs:
+            continue
+        comp = max(c, float(times[i])) + t_in
+        while batch and (comp - float(times[batch[0]])
+                         > float(budgets[batch[0]]) + 1e-12):
+            admit[batch.pop(0)] = False
+        if len(batch) == bs:
+            c = comp
+            batch = []
+    return admit
+
+
+def _admit_mask_multi(times: np.ndarray, sids: np.ndarray,
+                      bss: Sequence[int], t_ins: Sequence[float],
+                      budgets: np.ndarray, clock: float) -> np.ndarray:
+    """N-stream form of ``_admit_mask``: one shared virtual device clock
+    (every tenant's batches serialize on the accelerator, so congestion in
+    one stream delays all), per-stream forming batches. ``budgets`` is
+    per-*request* (the policy bakes priorities in before calling),
+    ``times``/``sids`` must be time-sorted."""
+    times = np.asarray(times, np.float64)
+    n = times.size
+    admit = np.ones(n, bool)
+    if n == 0:
+        return admit
+    sids = np.asarray(sids, np.int64)
+    budgets = np.asarray(budgets, np.float64)
+    bss = [int(b) for b in bss]
+    t_ins = [float(t) for t in t_ins]
+    batches: list[list[int]] = [[] for _ in bss]
+    c = float(clock)
+    for i in range(n):
+        j = int(sids[i])
+        batches[j].append(i)
+        if len(batches[j]) < bss[j]:
+            continue
+        comp = max(c, float(times[i])) + t_ins[j]
+        while batches[j] and (comp - float(times[batches[j][0]])
+                              > float(budgets[batches[j][0]]) + 1e-12):
+            admit[batches[j].pop(0)] = False
+        if len(batches[j]) == bss[j]:
+            c = comp
+            batches[j] = []
+    return admit
+
+
+@dataclasses.dataclass(frozen=True)
+class AdmissionPolicy:
+    """SLO-aware admission control for the closed-loop serving drivers.
+
+    Modes:
+     * ``"none"``    — admit everything (the PR-5 loop, byte-identical).
+     * ``"shed"``    — drop requests whose predicted completion under the
+       committed plan cannot meet the latency budget (load the window
+       provably cannot drain), including carried backlog already past it.
+     * ``"defer"``   — same predictor, but rejected requests re-enter the
+       next (sub-)window re-timestamped at its start: re-submission
+       semantics — the latency clock restarts, and the config's
+       ``defer_cap`` bounds the deferred backlog (overflow is shed).
+     * ``"degrade-bs"`` — trim nothing; when the window's demand is not
+       drainable under the committed plan, swap in the max-service-rate
+       plan (``problem.solve_infer_capacity``) and accept the violations:
+       the goodput-over-latency end of the tradeoff curve.
+
+    ``headroom`` scales the admission threshold (< 1 rejects earlier,
+    buying slack against fill-time variance). ``priorities`` is the
+    multi-tenant hook: per-stream positive weights, normalized to the
+    largest; a stream's admission budget is scaled by its weight, so as the
+    shared queue builds, lower-priority streams start shedding while
+    higher-priority tenants still admit."""
+    mode: str = "none"
+    headroom: float = 1.0
+    priorities: Optional[tuple] = None
+
+    def __post_init__(self):
+        if self.mode not in _ADMISSIONS:
+            raise ValueError(f"unknown admission mode {self.mode!r}; "
+                             f"use {_ADMISSIONS}")
+        if self.headroom <= 0.0:
+            raise ValueError("admission headroom must be positive")
+
+    @property
+    def active(self) -> bool:
+        return self.mode != "none"
+
+    @property
+    def trims(self) -> bool:
+        """Whether this mode removes requests from the window's trace."""
+        return self.mode in ("shed", "defer")
+
+    def stream_budget_scales(self, n_streams: int) -> np.ndarray:
+        """Per-stream admission-budget scales: headroom times the priority
+        weight (normalized so the highest-priority stream keeps the full
+        headroom). All-ones priorities when none are configured."""
+        if self.priorities is None:
+            pr = np.ones(n_streams)
+        else:
+            if len(self.priorities) != n_streams:
+                raise ValueError(f"{len(self.priorities)} priorities for "
+                                 f"{n_streams} streams")
+            pr = np.asarray(self.priorities, np.float64)
+            pr = pr / pr.max()
+        return self.headroom * pr
+
+    def admit(self, times: np.ndarray, nominal_budget: float, bs: int,
+              t_in: float, clock: float) -> np.ndarray:
+        """Single-stream admission mask over the effective arrival vector."""
+        buds = np.full(np.asarray(times).shape[0] if np.ndim(times) else 0,
+                       self.headroom * float(nominal_budget))
+        return _admit_mask(times, buds, bs, t_in, clock)
+
+    def admit_multi(self, times: np.ndarray, sids: np.ndarray,
+                    bss: Sequence[int], t_ins: Sequence[float],
+                    nominal_budgets: Sequence[float],
+                    clock: float) -> np.ndarray:
+        """Multi-tenant admission mask over time-sorted merged arrivals."""
+        scales = self.stream_budget_scales(len(nominal_budgets))
+        per_stream = scales * np.asarray(nominal_budgets, np.float64)
+        sids = np.asarray(sids, np.int64)
+        buds = per_stream[sids] if sids.size else np.empty(0)
+        return _admit_mask_multi(times, sids, bss, t_ins, buds, clock)
+
+    def gate(self, bs: int, t_in: float, budget: float):
+        """A trace-trimming callable for the real runtime
+        (``runtime.interleave_runtime``): ``gate(trace) -> (admitted_trace,
+        n_shed)`` applying exactly the engine-side admission mask, so a
+        runtime run under a FakeClock sheds the identical request set."""
+        from repro.core.simulate import ArrivalTrace
+
+        def _gate(trace):
+            if not self.trims:
+                return trace, 0
+            mask = self.admit(trace.times, budget, bs, t_in, 0.0)
+            if mask.all():
+                return trace, 0
+            return (ArrivalTrace(trace.times[mask], trace.duration,
+                                 trace.kind),
+                    int(np.count_nonzero(~mask)))
+        return _gate
 
 
 class RateEstimator:
@@ -212,6 +428,41 @@ class ControllerState:
         self.policies = [FeedbackPolicy(cfg) for _ in range(n_streams)]
         self.carry: Optional[QueueState] = None
         self.prev_pm = None
+        # deferred-request backlog (AdmissionPolicy mode "defer"): per-stream
+        # counts only — a deferred request re-enters re-timestamped at the
+        # next (sub-)window start, so its original arrival time is moot
+        self.deferred = np.zeros(n_streams, np.int64)
+
+    # -- deferred requests (admission mode "defer") --------------------------
+    def push_deferred(self, counts: Sequence[int]) -> int:
+        """Queue per-stream rejected-request counts for re-submission at the
+        next (sub-)window start. The config's ``defer_cap`` bounds the total
+        deferred backlog — without it, sustained overload would snowball the
+        re-offer queue forever; overflow is trimmed from the streams with
+        the largest deferred counts and returned (the driver records it as
+        shed)."""
+        self.deferred = self.deferred + np.asarray(counts, np.int64)
+        cap = self.cfg.defer_cap
+        dropped = 0
+        if cap is not None:
+            total = int(self.deferred.sum())
+            while total > cap:
+                j = int(np.argmax(self.deferred))
+                take = min(int(self.deferred[j]), total - cap)
+                self.deferred[j] -= take
+                total -= take
+                dropped += take
+        return dropped
+
+    def pop_deferred(self, t0: float) -> list[np.ndarray]:
+        """The deferred backlog re-submitted at ``t0``: one arrival vector
+        per stream, every request re-timestamped to the (sub-)window start
+        (its latency clock restarts at re-submission). Clears the backlog —
+        requests the next admission pass rejects again are re-deferred (or
+        shed) by the driver."""
+        out = [np.full(int(c), float(t0)) for c in self.deferred]
+        self.deferred = np.zeros_like(self.deferred)
+        return out
 
     # -- planning inputs ----------------------------------------------------
     def plan_rates(self, announced: Sequence[float], t0: float = 0.0,

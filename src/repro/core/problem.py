@@ -313,6 +313,115 @@ def solve_infer_interval(problem: InferProblem, rate_hi: float,
     return best
 
 
+# ---------------------------------------------------------------------------
+# burst-quantile planning + drainability (§5.4 burst survival). A Poisson
+# window at mean rate alpha sees alpha*T arrivals only on average; planning
+# at the mean leaves every upper-tail window queueing-infeasible. These
+# helpers let the closed loop plan at the window's arrival-count quantile
+# and check whether a committed plan can drain the window's demand — and if
+# not, how much must be shed or deferred. Pure-Python float ops, like every
+# solver in this module.
+# ---------------------------------------------------------------------------
+
+def _norm_ppf(q: float) -> float:
+    """Standard-normal quantile via Newton iteration on ``math.erf`` (the
+    CDF is smooth and monotone, so this converges fast from 0 for any
+    non-degenerate q); used only where the exact Poisson pmf underflows."""
+    x = 0.0
+    for _ in range(64):
+        cdf = 0.5 * (1.0 + math.erf(x / math.sqrt(2.0)))
+        pdf = math.exp(-0.5 * x * x) / math.sqrt(2.0 * math.pi)
+        if pdf <= 0.0:
+            break
+        step = (cdf - q) / pdf
+        x -= step
+        if abs(step) < 1e-12:
+            break
+    return x
+
+
+def poisson_quantile(mean: float, q: float) -> int:
+    """Smallest k with P[N <= k] >= q for N ~ Poisson(mean).
+
+    Exact pmf summation (the recursion p_k = p_{k-1} * mean / k) while
+    ``exp(-mean)`` is representable; above that (mean > ~700 — far past any
+    window this repo plans) a Cornish-Fisher-corrected normal quantile
+    ``mean + z*sqrt(mean) + (z^2 - 1)/6``, whose error is O(1) counts."""
+    if not 0.0 <= q < 1.0:
+        raise ValueError(f"quantile must be in [0, 1), got {q}")
+    if mean <= 0.0:
+        return 0
+    if mean <= 700.0:
+        p = math.exp(-mean)
+        cdf, k = p, 0
+        while cdf < q:
+            k += 1
+            p *= mean / k
+            cdf += p
+        return k
+    z = _norm_ppf(q)
+    return max(0, int(math.ceil(mean + math.sqrt(mean) * z
+                                + (z * z - 1.0) / 6.0)))
+
+
+def burst_rate(rate: float, duration: float, q: float) -> float:
+    """The rate to size a window's service headroom for: the window's
+    Poisson arrival-count q-quantile divided by the duration — never below
+    the mean rate, and the mean rate itself when quantile planning is off
+    (q <= 0) or the window is degenerate."""
+    if q <= 0.0 or rate <= 0.0 or duration <= 0.0:
+        return float(rate)
+    return max(float(rate),
+               poisson_quantile(float(rate) * float(duration), q)
+               / float(duration))
+
+
+def drain_capacity(bs: int, t_in: float, duration: float) -> int:
+    """Requests a committed (bs, t_in) plan can serve within ``duration``
+    seconds of exclusive managed service: full minibatches only (a trailing
+    partial batch never runs, as in the engine)."""
+    if duration <= 0.0:
+        return 0
+    if t_in <= 0.0:
+        return int(1e18)
+    return int(math.floor(duration / t_in)) * int(bs)
+
+
+def min_shed(n_requests: int, bs: int, t_in: float, duration: float) -> int:
+    """The minimal number of requests to shed (or defer past the window) so
+    the remainder can drain within the window under the committed plan."""
+    return max(0, int(n_requests) - drain_capacity(bs, t_in, duration))
+
+
+def drainable(n_pending: int, rate: float, bs: int, t_in: float,
+              duration: float) -> bool:
+    """Given the carried backlog (``n_pending`` requests already queued) and
+    the estimated arrival rate, can the committed plan drain the window's
+    demand within the window?"""
+    demand = int(n_pending) + int(math.ceil(max(0.0, float(rate))
+                                            * float(duration)))
+    return min_shed(demand, bs, t_in, duration) == 0
+
+
+def solve_infer_capacity(power_budget: float, obs: dict) -> Optional[Solution]:
+    """Graceful-degradation plan (AdmissionPolicy mode ``degrade-bs``): when
+    no plan can drain the window within the latency budget, pick the highest
+    service rate bs/t_in under the power budget alone — latency and
+    sustainability are waived; violations are accepted to preserve goodput.
+    The returned ``time`` is the plan's *service* time (not a peak latency —
+    there is no rate this plan is judged against). First-scanned entry wins
+    ties, as in every scalar solver here."""
+    best, best_cap = None, -1.0
+    for (pm, bs), (t, p) in obs.items():
+        if p > power_budget:
+            continue
+        cap = bs / t if t > 0.0 else float("inf")
+        if cap > best_cap:
+            best = Solution(pm=pm, bs=bs, time=t, power=p)
+            best_cap = cap
+    return best
+
+
 def solve_concurrent(problem: ConcurrentProblem, train_obs: dict,
                      infer_obs: dict) -> Optional[Solution]:
     """Primary: arg max theta_tr s.t. lambda <= budget and max(p) <= budget.
@@ -401,6 +510,78 @@ def solve_multi_tenant(problem: MultiTenantProblem, train_obs: Optional[dict],
             if problem.train:
                 tau = multi_interleave_tau(bss, rates, t_ins, t_tr)
                 theta = tau / multi_cycle(bss, rates)
+                key = (theta, -worst)
+            else:
+                tau, theta = None, 0.0
+                key = (-worst,)
+            if best is None or key > best_key:
+                best = MultiTenantSolution(pm=pm, bss=tuple(bss), tau_tr=tau,
+                                           times=tuple(lams), power=p,
+                                           throughput=theta)
+                best_key = key
+    return best
+
+
+def solve_multi_tenant_interval(problem: MultiTenantProblem,
+                                rate_his: Sequence[float],
+                                train_obs: Optional[dict],
+                                infer_obs: Sequence[dict]
+                                ) -> Optional[MultiTenantSolution]:
+    """``solve_multi_tenant`` for per-stream rate *intervals* — the N-stream
+    counterpart of ``solve_infer_interval``. Sustainability (and the joint
+    slack) must hold at each stream's margined high rate ``max(rate_hi,
+    arrival_rate)``, where the queue would build; the per-stream latency
+    budgets — and the latency side of the objective — are judged at the
+    problem's (low-end estimate) rates, where the batch-fill wait is
+    longest. The training-throughput objective is judged at the high rates
+    too: the committed tau_tr is the slack *guaranteed* under the margined
+    load (the engine fills conservatively regardless). Degenerates to
+    ``solve_multi_tenant`` when every high rate equals the stream rate, and
+    with one stream replays ``solve_infer_interval`` op-for-op. Same scan
+    order and first-strict-improvement tie-break as every solver here."""
+    n = problem.n_streams
+    if len(rate_his) != n:
+        raise ValueError(f"expected {n} high rates, got {len(rate_his)}")
+    rates = [s.arrival_rate for s in problem.streams]
+    his = [max(float(h), r) for h, r in zip(rate_his, rates)]
+    spec0 = problem.streams[0]
+    allowed0 = None if spec0.batch_sizes is None else set(spec0.batch_sizes)
+    rest = [_stream_candidates(obs, s)
+            for obs, s in zip(infer_obs[1:], problem.streams[1:])]
+    best = None
+    best_key = None
+    for (pm, bs0), (t0, p0) in infer_obs[0].items():
+        if allowed0 is not None and bs0 not in allowed0:
+            continue
+        if problem.train and (train_obs is None or pm not in train_obs):
+            continue
+        per_stream = [c.get(pm) for c in rest]
+        if any(ps is None for ps in per_stream):
+            continue
+        t_tr = p_tr = None
+        if problem.train:
+            t_tr, p_tr = train_obs[pm]
+        for combo in _cross(per_stream):
+            bss = [bs0] + [c[0] for c in combo]
+            t_ins = [t0] + [c[1] for c in combo]
+            p = p0
+            for c in combo:
+                p = max(p, c[2])
+            if p_tr is not None:
+                p = max(p, p_tr)
+            if p > problem.power_budget:
+                continue
+            if not multi_sustainable(bss, his, t_ins):
+                continue
+            lams = [multi_peak_latency(bss, rates, t_ins, i)
+                    for i in range(n)]
+            if any(lam > s.latency_budget
+                   for lam, s in zip(lams, problem.streams)):
+                continue
+            worst = max(lams)
+            if problem.train:
+                tau = multi_interleave_tau(bss, his, t_ins, t_tr)
+                theta = tau / multi_cycle(bss, his)
                 key = (theta, -worst)
             else:
                 tau, theta = None, 0.0

@@ -48,9 +48,12 @@ from repro.core.gmd import (ConcurrentProfiler, GMDConcurrent, GMDInfer,
 from repro.core.interleave import ExecutionReport
 from repro.core.oracle import Oracle
 from repro.core.powermode import PowerModeSpace
-from repro.core.simulate import (ArrivalTrace, MultiTenantReport, simulate,
+from repro.core.simulate import (ArrivalTrace, MultiTenantReport, QueueState,
+                                 first_backlog_crossing, simulate,
                                  simulate_batch, simulate_multi_tenant,
                                  simulate_multi_tenant_batch)
+
+import numpy as np
 
 
 class Scenario(enum.Enum):
@@ -208,7 +211,17 @@ class WindowReport:
     the open-loop oracle configuration, the estimate under ``"ewma"``),
     whether the committed plan differs from the previous window's,
     the wall seconds charged for switching power modes into this window's
-    plan, and how many backlogged requests were carried into the window."""
+    plan, and how many backlogged requests were carried into the window.
+
+    The burst-survival fields account for graceful degradation
+    (``AdmissionPolicy``): how many of the window's offered requests were
+    shed at admission, how many were deferred to the next window
+    (re-submission semantics — their latency clock restarts), the goodput —
+    requests served within the *nominal* latency budget as a fraction of
+    the window's own offered arrivals (deferred re-offers served this
+    window count toward the numerator, so a drain window can transiently
+    exceed 1) — and how many times the window was split for mid-window
+    re-planning."""
     rate: object                      # float | tuple[float, ...]
     solution: Optional[object]        # Solution | MultiTenantSolution
     report: Optional[object]          # ExecutionReport | MultiTenantReport
@@ -216,6 +229,11 @@ class WindowReport:
     replanned: bool = False
     mode_switch_s: float = 0.0
     carried_requests: int = 0
+    shed_requests: int = 0
+    deferred_requests: int = 0
+    goodput: Optional[float] = None
+    offered_requests: int = 0         # the window's own arrivals (0 when
+    splits: int = 0                   # the trace was never generated)
 
 
 def _poisson_seed(seed: int, window: int, stream: int, n_streams: int) -> int:
@@ -226,6 +244,21 @@ def _poisson_seed(seed: int, window: int, stream: int, n_streams: int) -> int:
     earlier window's stream index >= 101 — impossible per call today, but a
     silent trap for wider tenant counts; the stride now adapts.)"""
     return seed + window * max(1, int(n_streams)) + stream
+
+
+def _open_goodput(rep, latency_budget) -> Optional[float]:
+    """Open-loop goodput: requests served within the nominal budget as a
+    fraction of the window's offered arrivals (open loop never sheds, so
+    offered == served; an unsolved window offers everything and serves
+    nothing). ``None`` when there is no budget to judge against."""
+    if latency_budget is None:
+        return None
+    if rep is None:
+        return 0.0
+    lats = np.asarray(rep.latencies, np.float64)
+    offered = len(rep.trace) if rep.trace is not None else int(lats.size)
+    good = int(np.count_nonzero(lats <= float(latency_budget)))
+    return good / offered if offered else 1.0
 
 
 def _replan_flags(sols: Sequence, key) -> list[bool]:
@@ -394,16 +427,20 @@ class Fulcrum:
 
     # -- dynamic arrival rates (§5.4): re-planning controller ----------------
     def _dynamic_solver(self, w: WorkloadProfile, strategy: str
-                        ) -> tuple[Callable, Optional[Callable]]:
+                        ) -> tuple[Callable, Optional[Callable],
+                                   Optional[Callable]]:
         """One-window solvers carrying planning state across windows (the
         §5.4 reuse rules): GMD shares one profiler — cached profiles are
         free, so every window re-searches at full budget but mostly hits
         the cache; only genuinely new (pm, bs) profiles count against
         max_tries — and fitted strategies (ALS/RND/NN) answer every window
-        from one model. Returns ``(solve, interval_solve)``:
+        from one model. Returns ``(solve, interval_solve, capacity_solve)``:
         ``interval_solve(prob, rate_hi)`` plans the rate interval
-        [prob.arrival_rate, rate_hi] (closed-loop margin headroom) and is
-        None for fitted strategies, which only answer point problems."""
+        [prob.arrival_rate, rate_hi] (closed-loop margin headroom);
+        ``capacity_solve(power_budget)`` returns the max-service-rate plan
+        over the profiled observations (the ``degrade-bs`` admission
+        fallback). Both are None for fitted strategies, which only answer
+        point problems."""
         if strategy == "gmd":
             prof = Profiler(self.device, w)
 
@@ -426,8 +463,11 @@ class Fulcrum:
                                                  prof.observed())
                 return sol
 
-            return solve, interval_solve
-        return self._strategy(Scenario.DYNAMIC, strategy, w).solve, None
+            def capacity_solve(power_budget: float) -> Optional[P.Solution]:
+                return P.solve_infer_capacity(power_budget, prof.observed())
+
+            return solve, interval_solve, capacity_solve
+        return self._strategy(Scenario.DYNAMIC, strategy, w).solve, None, None
 
     def solve_dynamic(self, w: WorkloadProfile, power_budget: float,
                       latency_budget: float, rates: Sequence[float],
@@ -442,15 +482,20 @@ class Fulcrum:
             strat = self._strategy(Scenario.DYNAMIC, strategy, w)
             if hasattr(strat, "solve_batch"):
                 return list(strat.solve_batch(probs))
-        solve, _ = self._dynamic_solver(w, strategy)
+        solve, _, _ = self._dynamic_solver(w, strategy)
         return [solve(prob) for prob in probs]
 
     def _dynamic_multi_solver(self, specs: Sequence[P.StreamSpec],
                               strategy: str,
-                              w_tr: Optional[WorkloadProfile]) -> Callable:
+                              w_tr: Optional[WorkloadProfile]
+                              ) -> tuple[Callable, Optional[Callable]]:
         """The multi-tenant counterpart of ``_dynamic_solver``: GMD shares
         one MultiTenantProfiler across windows; fitted strategies answer
-        every window from one model."""
+        every window from one model. Returns ``(solve, interval_solve)`` —
+        the second only for GMD, judging sustainability and training
+        throughput at margined per-stream rates while the latency budgets
+        hold at the unmargined estimates (``solve_multi_tenant_interval``);
+        fitted strategies answer point problems only and get ``None``."""
         if strategy == "gmd":
             mp = _mtprof(self, w_tr, *[s.workload for s in specs])
 
@@ -465,9 +510,30 @@ class Fulcrum:
                                                mp.infer_observed())
                 return sol
 
-            return solve
+            def interval_solve(prob: P.MultiTenantProblem,
+                               rate_his: Sequence[float]
+                               ) -> Optional[P.MultiTenantSolution]:
+                tobs = mp.train.observed_modes() if mp.train else None
+                sol = P.solve_multi_tenant_interval(prob, rate_his, tobs,
+                                                    mp.infer_observed())
+                if sol is None:
+                    # profile toward the margined rates so modes with that
+                    # much service headroom enter the observation set
+                    GMDMultiTenant(mp, self.space).solve(
+                        P.MultiTenantProblem(
+                            prob.power_budget,
+                            tuple(dataclasses.replace(
+                                s, arrival_rate=float(h))
+                                for s, h in zip(prob.streams, rate_his)),
+                            train=prob.train))
+                    tobs = mp.train.observed_modes() if mp.train else None
+                    sol = P.solve_multi_tenant_interval(
+                        prob, rate_his, tobs, mp.infer_observed())
+                return sol
+
+            return solve, interval_solve
         return self._strategy(Scenario.MULTI_TENANT, strategy, w_tr,
-                              *[s.workload for s in specs]).solve
+                              *[s.workload for s in specs]).solve, None
 
     def solve_dynamic_multi_tenant(self, specs: Sequence[P.StreamSpec],
                                    power_budget: float,
@@ -492,7 +558,7 @@ class Fulcrum:
                                    w_tr if train else None,
                                    *[s.workload for s in specs])
             return list(strat.solve_batch(probs))
-        solve = self._dynamic_multi_solver(specs, strategy, w_tr)
+        solve, _ = self._dynamic_multi_solver(specs, strategy, w_tr)
         return [solve(prob) for prob in probs]
 
     def serve_dynamic(self, w, power_budget: float,
@@ -551,7 +617,12 @@ class Fulcrum:
         by_window = {i: rep for (i, _, _), rep in zip(lanes, reps)}
         replanned = _replan_flags(sols, lambda s: (s.pm, s.bs, s.tau_tr))
         return [WindowReport(float(rate), sol, by_window.get(i),
-                             estimated_rate=float(rate), replanned=rp)
+                             estimated_rate=float(rate), replanned=rp,
+                             goodput=_open_goodput(by_window.get(i),
+                                                   latency_budget),
+                             offered_requests=len(by_window[i].trace)
+                             if i in by_window
+                             and by_window[i].trace is not None else 0)
                 for i, (rate, sol, rp)
                 in enumerate(zip(rates, sols, replanned))]
 
@@ -561,9 +632,16 @@ class Fulcrum:
         """Single-stream closed loop: one window at a time, in absolute
         time (window k starts at k * window_duration), each plan fed by the
         controller's rate estimate and effective budget, each executed
-        report folded back into the controller state."""
+        report folded back into the controller state. Burst survival rides
+        on top (``_closed_loop_window``): admission control trims the
+        window's trace before execution, burst-quantile planning sizes the
+        service headroom at the window's Poisson arrival-count quantile,
+        and a backlog crossing splits the window to re-enter the controller
+        early. With those knobs at their defaults the pass degenerates to
+        the plain PR-5 loop, byte-identical on NumPy."""
         state = ControllerState(cfg, 1)
-        solve, interval_solve = self._dynamic_solver(w, strategy)
+        adm = cfg.admission_policy()
+        solvers = self._dynamic_solver(w, strategy)
         out: list[WindowReport] = []
         prev_key = None
         for i, rate in enumerate(rates):
@@ -572,16 +650,55 @@ class Fulcrum:
                    if arrivals == "uniform"
                    else ArrivalTrace.poisson(rate, window_duration,
                                              seed + i)).shifted(t0)
-            hi = state.plan_rates([rate], t0, window_duration)[0]
+            wr = self._closed_loop_window(
+                w, power_budget, latency_budget, float(rate), win, t0,
+                t0 + window_duration, window_duration, state, adm, cfg,
+                solvers, backend, prev_key)
+            if wr.solution is not None:
+                prev_key = (wr.solution.pm, wr.solution.bs,
+                            wr.solution.tau_tr)
+            out.append(wr)
+        return out
+
+    def _closed_loop_window(self, w, power_budget, latency_budget, rate,
+                            win, t0, t1, window_duration, state, adm, cfg,
+                            solvers, backend, prev_key) -> WindowReport:
+        """One announced rate window of the single-stream closed loop,
+        possibly served as several sub-windows: plan, admission-trim,
+        execute — and when the backlog crosses ``cfg.split_backlog``
+        mid-window, replay only the prefix up to the crossing arrival (a
+        bitwise prefix of the full run, by the carryover replay contract),
+        fold it into the controller state, and re-enter planning at the
+        crossing. Deferred requests re-enter the next sub-window
+        re-timestamped at its start."""
+        solve, interval_solve, capacity_solve = solvers
+        t_cur, remaining = t0, win
+        splits = 0
+        subs = []                 # (sol, rep, switch_s) per executed piece
+        shed = deferred_out = 0
+        est0 = carried0 = None
+        unserved = False
+        while True:
+            # first sub-window: the exact PR-5 planning inputs (dur is the
+            # announced duration, not t1 - t0, which can differ in the last
+            # float ulp)
+            dur = window_duration if t_cur == t0 else t1 - t_cur
+            hi = state.plan_rates([rate], t_cur, dur)[0]
             # the interval's low end is the raw rate estimate — no backlog
             # compensation: once the carried backlog drains, arrivals
             # resume at the estimate, and that is the rate the batch-fill
             # wait (and so the budget check) must be judged at
-            est = state.plan_rates([rate], t0, window_duration,
+            est = state.plan_rates([rate], t_cur, dur,
                                    margin=1.0, pressure=False)[0]
+            if cfg.burst_quantile > 0.0:
+                # survive the window's upper-tail arrival count, not just
+                # its mean: service headroom sized at the Poisson quantile
+                hi = max(hi, P.burst_rate(est, dur, cfg.burst_quantile))
             bud = state.plan_budgets([latency_budget])[0]
             carried = len(state.carry) if cfg.carry_backlog \
                 and state.carry is not None else 0
+            if est0 is None:
+                est0, carried0 = est, carried
             sol = None
             if hi > est:
                 # margin headroom: sustainable up to the margined rate,
@@ -618,26 +735,157 @@ class Fulcrum:
                 # serving at the nominal budget beats not serving at all
                 sol = solve(P.InferProblem(power_budget,
                                            float(latency_budget), est))
+            deferred_in = state.pop_deferred(t_cur)[0] if adm.active \
+                else None
+            if adm.mode == "degrade-bs" and sol is not None:
+                sol = self._degrade_plan(w, power_budget, sol, est, carried
+                                         + (deferred_in.size
+                                            if deferred_in is not None
+                                            else 0),
+                                         dur, hi, solve, capacity_solve)
             if sol is None:
-                state.observe_unserved([win], window_duration)
-                out.append(WindowReport(float(rate), None, None,
-                                        estimated_rate=est,
-                                        carried_requests=carried))
-                continue
+                if deferred_in is not None and deferred_in.size:
+                    # nothing serves this piece: re-defer the re-offers
+                    shed += state.push_deferred([int(deferred_in.size)])
+                state.observe_unserved([remaining], dur)
+                unserved = True
+                break
             switch_s = state.mode_switch(sol.pm)
-            rep = simulate(self.device, None, w, sol.pm, sol.bs, win,
+            carry_in = state.window_carry_in(t_cur, switch_s)
+            eff = remaining
+            if deferred_in is not None and deferred_in.size:
+                eff = ArrivalTrace.concat(
+                    [ArrivalTrace(deferred_in, remaining.duration,
+                                  remaining.kind), remaining],
+                    duration=remaining.duration)
+            run_trace, run_carry = eff, carry_in
+            rej_times = None
+            if adm.trims:
+                t_in = self.device.time_power(w, sol.pm, sol.bs)[0]
+                k0 = len(carry_in)
+                all_times = np.concatenate([carry_in.pending, eff.times])
+                mask = adm.admit(all_times, latency_budget, sol.bs, t_in,
+                                 carry_in.clock)
+                if not mask.all():
+                    run_carry = QueueState(carry_in.pending[mask[:k0]],
+                                           carry_in.clock)
+                    run_trace = ArrivalTrace(eff.times[mask[k0:]],
+                                             eff.duration, eff.kind)
+                    rej_times = all_times[~mask]
+            rep = simulate(self.device, None, w, sol.pm, sol.bs, run_trace,
                            "managed", tau_cap=sol.tau_tr, backend=backend,
-                           carry_in=state.window_carry_in(t0, switch_s))
-            state.observe([win], [rep], [latency_budget], window_duration,
+                           carry_in=run_carry)
+            split_t = None
+            if cfg.split_backlog is not None and splits < cfg.max_splits:
+                split_t = self._find_split(run_carry, run_trace, rep,
+                                           sol.bs, cfg.split_backlog,
+                                           t_cur, t1, window_duration)
+            if split_t is not None:
+                # serve only the prefix up to the crossing — a bitwise
+                # prefix of the run above (clip keeps absolute times; the
+                # chained QueueState re-enters the identical recurrence) —
+                # and re-plan the remainder from the crossing
+                rep = simulate(self.device, None, w, sol.pm, sol.bs,
+                               run_trace.clip(t_cur, split_t), "managed",
+                               tau_cap=sol.tau_tr, backend=backend,
+                               carry_in=run_carry)
+            t_hi = t1 if split_t is None else split_t
+            if rej_times is not None:
+                # admission decisions stand only for the piece that ran;
+                # rejections at/after a split are re-decided next pass
+                n_rej = int(np.count_nonzero(rej_times < t_hi))
+                if adm.mode == "defer":
+                    dropped = state.push_deferred([n_rej])
+                    deferred_out += n_rej - dropped
+                    shed += dropped
+                else:
+                    shed += n_rej
+            raw_obs = remaining if split_t is None \
+                else remaining.clip(t_cur, split_t)
+            state.observe([raw_obs], [rep], [latency_budget],
+                          dur if split_t is None else split_t - t_cur,
                           rep.queue_state)
-            key = (sol.pm, sol.bs, sol.tau_tr)
-            out.append(WindowReport(float(rate), sol, rep,
-                                    estimated_rate=est,
-                                    replanned=key != prev_key,
-                                    mode_switch_s=switch_s,
-                                    carried_requests=carried))
-            prev_key = key
-        return out
+            subs.append((sol, rep, switch_s))
+            if split_t is None:
+                break
+            splits += 1
+            t_cur = split_t
+            remaining = remaining.clip(split_t, t1)
+        offered = len(win)
+        if not subs:
+            return WindowReport(rate, None, None, estimated_rate=est0,
+                                carried_requests=carried0,
+                                shed_requests=shed,
+                                deferred_requests=deferred_out,
+                                goodput=0.0 if offered else 1.0,
+                                offered_requests=offered, splits=splits)
+        sol_f, rep_f, _ = subs[-1]
+        if len(subs) == 1 and not unserved:
+            rep, switch_total = rep_f, subs[0][2]
+        else:
+            lats = np.concatenate([np.asarray(r.latencies, np.float64)
+                                   for _, r, _ in subs])
+            rep = ExecutionReport(
+                "managed", lats,
+                sum(r.train_minibatches for _, r, _ in subs),
+                window_duration, max(r.power for _, r, _ in subs), win,
+                queue_state=rep_f.queue_state)
+            switch_total = sum(s for _, _, s in subs)
+        good = int(np.count_nonzero(np.asarray(rep.latencies, np.float64)
+                                    <= latency_budget))
+        gp = good / offered if offered else 1.0
+        rep.shed_requests, rep.deferred_requests = shed, deferred_out
+        rep.goodput = gp
+        key = (sol_f.pm, sol_f.bs, sol_f.tau_tr)
+        return WindowReport(rate, sol_f, rep, estimated_rate=est0,
+                            replanned=key != prev_key,
+                            mode_switch_s=switch_total,
+                            carried_requests=carried0,
+                            shed_requests=shed,
+                            deferred_requests=deferred_out,
+                            goodput=gp, offered_requests=offered,
+                            splits=splits)
+
+    def _degrade_plan(self, w, power_budget, sol, est, n_waiting, dur, hi,
+                      solve, capacity_solve):
+        """The ``degrade-bs`` admission mode: when the window's demand
+        (carried backlog + deferred re-offers + estimated arrivals) is not
+        drainable under the committed plan, swap in a higher-capacity plan
+        and accept the latency violations — serve everything, degraded.
+        GMD takes the max-service-rate plan over its profiled observations;
+        fitted strategies (no observation dict) re-solve at the margined
+        rate with the latency budget waived."""
+        t_in = self.device.time_power(w, sol.pm, sol.bs)[0]
+        if P.drainable(n_waiting, est, sol.bs, t_in, dur):
+            return sol
+        cand = capacity_solve(power_budget) if capacity_solve is not None \
+            else solve(P.InferProblem(power_budget, float("inf"), hi))
+        if cand is None:
+            return sol
+        c_t = self.device.time_power(w, cand.pm, cand.bs)[0]
+        return cand if cand.bs / c_t > sol.bs / t_in else sol
+
+    def _find_split(self, carry, trace, rep, bs, threshold, t_cur, t1,
+                    window_duration):
+        """Where to split a running window for mid-window re-planning: the
+        timestamp of the first arrival whose backlog exceeds the threshold,
+        provided it falls strictly inside the piece and leaves a meaningful
+        remainder (>= 5% of the window) to re-plan."""
+        bs = int(bs)
+        lats = np.asarray(rep.latencies, np.float64)
+        times = np.concatenate([carry.pending, trace.times]) if len(carry) \
+            else trace.times
+        # batch completions, recovered from the report's latencies (the
+        # last request of each minibatch: latency + arrival = completion;
+        # ulp-level roundtrip error cannot move a count-based crossing)
+        comps = lats[bs - 1::bs] + times[bs - 1:lats.size:bs]
+        idx = first_backlog_crossing(times, comps, bs, threshold)
+        if idx is None:
+            return None
+        ts = float(times[idx])
+        if ts <= t_cur or (t1 - ts) < 0.05 * window_duration:
+            return None
+        return ts
 
     def _serve_dynamic_multi(self, specs, power_budget, rate_windows,
                              strategy, window_duration, arrivals, seed,
@@ -667,10 +915,21 @@ class Fulcrum:
         by_window = {i: rep for (i, _, _), rep in zip(lanes, reps)}
         replanned = _replan_flags(
             sols, lambda s: (s.pm, tuple(s.bss), s.tau_tr))
+        nominals = [s.latency_budget for s in specs]
+        gps, offers = {}, {}
+        for (i, _, traces), rep in zip(lanes, reps):
+            offered = sum(len(tr) for tr in traces)
+            good = sum(int(np.count_nonzero(
+                np.asarray(r.latencies, np.float64) <= nb))
+                for r, nb in zip(rep.streams, nominals))
+            gps[i] = good / offered if offered else 1.0
+            offers[i] = offered
+            rep.goodput = gps[i]
         return [WindowReport(tuple(float(r) for r in rvec), sol,
                              by_window.get(i),
                              estimated_rate=tuple(float(r) for r in rvec),
-                             replanned=rp)
+                             replanned=rp, goodput=gps.get(i, 0.0),
+                             offered_requests=offers.get(i, 0))
                 for i, (rvec, sol, rp)
                 in enumerate(zip(rate_windows, sols, replanned))]
 
@@ -679,10 +938,25 @@ class Fulcrum:
                                  w_tr, backend, cfg) -> list[WindowReport]:
         """N-stream closed loop: per-stream rate estimators and feedback
         policies (each tenant's budget tightens and relaxes independently),
-        one merged engine run per window with shared backlog carryover."""
+        one merged engine run per window with shared backlog carryover.
+
+        Burst survival mirrors the single-stream driver: GMD plans through
+        the rate-*interval* solve (``solve_multi_tenant_interval`` —
+        sustainability and training throughput judged at the margined
+        per-stream rates, latency budgets at the unmargined estimates;
+        fitted strategies keep the point solve + down-move guard), the
+        burst quantile lifts each stream's high rate to its window arrival-
+        count quantile, and a ``shed``/``defer`` policy trims the merged
+        arrival vector through the priority-aware multi gate before the
+        engine runs. Windows are not split mid-flight here (the N-stream
+        engine's merged batching makes a prefix replay stream-coupled);
+        ``degrade-bs`` likewise degenerates to no trimming — both are
+        single-stream refinements."""
         n = len(specs)
         state = ControllerState(cfg, n)
-        solve = self._dynamic_multi_solver(specs, strategy, w_tr)
+        adm = cfg.admission_policy()
+        solve, interval_solve = self._dynamic_multi_solver(specs, strategy,
+                                                           w_tr)
         nominals = [s.latency_budget for s in specs]
         train = w_tr is not None
         out: list[WindowReport] = []
@@ -702,6 +976,12 @@ class Fulcrum:
             # stream driver: the budget guard belongs at the estimate
             base = state.plan_rates(rvec, t0, window_duration, margin=1.0,
                                     pressure=False)
+            if cfg.burst_quantile > 0.0:
+                # survive each stream's upper-tail arrival count, not just
+                # its mean: headroom sized at the Poisson window quantile
+                est = [max(e, P.burst_rate(b, window_duration,
+                                           cfg.burst_quantile))
+                       for e, b in zip(est, base)]
             buds = state.plan_budgets(nominals)
             carried = len(state.carry) if cfg.carry_backlog \
                 and state.carry is not None else 0
@@ -715,17 +995,28 @@ class Fulcrum:
 
             sol = None
             if est != base:
-                # margined plan, kept only if every stream's batch-fill
-                # wait still fits its budget at the unmargined estimate
-                # (same down-move guard as the single-stream driver)
-                sol = solve(_prob(est, buds))
-                if sol is not None:
-                    for lam, b_, rm, rb, bud in zip(sol.times, sol.bss,
-                                                    est, base, buds):
-                        t_in = lam - P.queueing_time(b_, rm)
-                        if P.peak_latency(b_, rb, t_in) > bud + 1e-12:
-                            sol = None
-                            break
+                if interval_solve is not None:
+                    # rate-interval plan: sustainability and training
+                    # throughput at the margined rates, latency budgets
+                    # pinned at the unmargined estimates
+                    sol = interval_solve(_prob(base, buds), est)
+                    if sol is None:
+                        # dead zone — prefer the high end, as in the
+                        # single-stream driver: an unsustainable plan
+                        # floods every stream's shared queue
+                        sol = solve(_prob(est, buds))
+                else:
+                    # fitted strategies answer point problems only: keep
+                    # the margined plan if every stream's batch-fill wait
+                    # still fits its budget at the unmargined estimate
+                    sol = solve(_prob(est, buds))
+                    if sol is not None:
+                        for lam, b_, rm, rb, bud in zip(sol.times, sol.bss,
+                                                        est, base, buds):
+                            t_in = lam - P.queueing_time(b_, rm)
+                            if P.peak_latency(b_, rb, t_in) > bud + 1e-12:
+                                sol = None
+                                break
             if sol is None:
                 est = base
                 sol = solve(_prob(est, buds))
@@ -738,25 +1029,92 @@ class Fulcrum:
                     tuple(dataclasses.replace(s, arrival_rate=float(r))
                           for s, r in zip(specs, est)), train=train))
             rate = tuple(float(r) for r in rvec)
+            deferred_in = state.pop_deferred(t0) if adm.active else None
+            shed = deferred_out = 0
             if sol is None:
+                if deferred_in is not None:
+                    # nothing serves this window: re-defer the re-offers
+                    shed += state.push_deferred(
+                        [int(d.size) for d in deferred_in])
                 state.observe_unserved(traces, window_duration)
+                offered = sum(len(tr) for tr in traces)
                 out.append(WindowReport(rate, None, None,
                                         estimated_rate=tuple(est),
-                                        carried_requests=carried))
+                                        carried_requests=carried,
+                                        shed_requests=shed,
+                                        goodput=0.0 if offered else 1.0,
+                                        offered_requests=offered))
                 continue
             switch_s = state.mode_switch(sol.pm)
+            carry_in = state.window_carry_in(t0, switch_s)
+            eff = traces
+            if deferred_in is not None and any(d.size for d in deferred_in):
+                eff = [ArrivalTrace(np.concatenate([d, tr.times]),
+                                    tr.duration, tr.kind) if d.size else tr
+                       for d, tr in zip(deferred_in, traces)]
+            run_traces, run_carry = eff, carry_in
+            rej = [0] * n
+            if adm.trims:
+                t_ins = [self.device.time_power(s.workload, sol.pm, b)[0]
+                         for s, b in zip(specs, sol.bss)]
+                pend = carry_in.pending
+                psids = carry_in.stream_ids if carry_in.stream_ids \
+                    is not None else np.zeros(len(pend), np.int64)
+                cat_times = np.concatenate(
+                    [pend] + [tr.times for tr in eff])
+                cat_sids = np.concatenate(
+                    [psids] + [np.full(len(tr), j, np.int64)
+                               for j, tr in enumerate(eff)])
+                order = np.argsort(cat_times, kind="stable")
+                m_sorted = adm.admit_multi(
+                    cat_times[order], cat_sids[order], sol.bss, t_ins,
+                    nominals, carry_in.clock)
+                mask = np.empty(cat_times.size, bool)
+                mask[order] = m_sorted
+                if not mask.all():
+                    k0 = pend.size
+                    run_carry = QueueState(pend[mask[:k0]], carry_in.clock,
+                                           psids[mask[:k0]])
+                    run_traces, off = [], k0
+                    for j, tr in enumerate(eff):
+                        mj = mask[off:off + len(tr)]
+                        off += len(tr)
+                        rej[j] = int(np.count_nonzero(~mj))
+                        run_traces.append(
+                            tr if mj.all()
+                            else ArrivalTrace(tr.times[mj], tr.duration,
+                                              tr.kind))
+                    rej = [r + int(np.count_nonzero(~mask[:k0]
+                                                    & (psids == j)))
+                           for j, r in enumerate(rej)]
             rep = simulate_multi_tenant(
                 self.device, w_tr if train else None,
-                [s.workload for s in specs], sol.pm, sol.bss, traces,
-                tau_cap=sol.tau_tr, backend=backend,
-                carry_in=state.window_carry_in(t0, switch_s))
+                [s.workload for s in specs], sol.pm, sol.bss, run_traces,
+                tau_cap=sol.tau_tr, backend=backend, carry_in=run_carry)
+            if any(rej):
+                if adm.mode == "defer":
+                    dropped = state.push_deferred(rej)
+                    deferred_out += sum(rej) - dropped
+                    shed += dropped
+                else:
+                    shed += sum(rej)
             state.observe(traces, rep.streams, nominals, window_duration,
                           rep.queue_state)
+            offered = sum(len(tr) for tr in traces)
+            good = sum(int(np.count_nonzero(
+                np.asarray(r.latencies, np.float64) <= nb))
+                for r, nb in zip(rep.streams, nominals))
+            gp = good / offered if offered else 1.0
+            rep.shed_requests, rep.deferred_requests = shed, deferred_out
+            rep.goodput = gp
             key = (sol.pm, tuple(sol.bss), sol.tau_tr)
             out.append(WindowReport(rate, sol, rep,
                                     estimated_rate=tuple(est),
                                     replanned=key != prev_key,
                                     mode_switch_s=switch_s,
-                                    carried_requests=carried))
+                                    carried_requests=carried,
+                                    shed_requests=shed,
+                                    deferred_requests=deferred_out,
+                                    goodput=gp, offered_requests=offered))
             prev_key = key
         return out

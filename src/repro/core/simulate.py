@@ -272,6 +272,12 @@ class ExecutionReport:
         default=None, repr=False, compare=False)             # engine state
     drift_s: Optional[float] = None   # runtime-vs-engine max |Δlatency| (s),
     #                                   filled by runtime.attach_drift
+    # graceful-degradation accounting (§5.4 burst survival), filled by the
+    # serving drivers / runtime admission gate — 0 / None when no admission
+    # control ran
+    shed_requests: int = 0            # offered requests dropped at admission
+    deferred_requests: int = 0        # offered requests pushed to next window
+    goodput: Optional[float] = None   # in-budget served / offered fraction
     _sorted: Optional[np.ndarray] = dataclasses.field(
         default=None, init=False, repr=False, compare=False)
 
@@ -390,6 +396,30 @@ def _fill_counts(ready: np.ndarray, completions: np.ndarray,
     for k in suspicious:
         m[k] = _fill_count_exact(float(start[k]), float(ready[k]), t_tr)
     return m
+
+
+def first_backlog_crossing(times: np.ndarray, completions: np.ndarray,
+                           bs: int, threshold: int) -> Optional[int]:
+    """Index of the first arrival at which the backlog — requests arrived
+    but not yet completed, counting the arriving request itself — exceeds
+    ``threshold``, given the run's batch completion times (each completion
+    retires one ``bs``-sized minibatch). ``None`` when the backlog never
+    crosses. ``times`` must be the *effective* arrival vector of the run
+    (carried pending requests first, as the managed engine sees them).
+
+    The mid-window re-planning driver splits the window at the returned
+    arrival's timestamp via ``ArrivalTrace.clip`` + ``QueueState`` chaining;
+    the carryover replay contract (windowed == long trace, bitwise on NumPy)
+    makes the split exact by construction — this function only has to pick
+    the split point deterministically."""
+    times = np.asarray(times, np.float64)
+    if times.size == 0:
+        return None
+    comps = np.asarray(completions, np.float64)
+    done = int(bs) * np.searchsorted(comps, times, side="right")
+    backlog = np.arange(1, times.size + 1) - done
+    idx = np.flatnonzero(backlog > int(threshold))
+    return int(idx[0]) if idx.size else None
 
 
 def _queue_completions(ready: np.ndarray, exec_t: np.ndarray) -> np.ndarray:
@@ -624,6 +654,11 @@ class MultiTenantReport:
     trace: Optional[ArrivalTrace] = None   # the merged trace that was run
     queue_state: Optional[QueueState] = dataclasses.field(  # end-of-window
         default=None, repr=False, compare=False)            # engine state
+    # graceful-degradation accounting (§5.4 burst survival) across all
+    # tenants, filled by the serving drivers / runtime admission gate
+    shed_requests: int = 0
+    deferred_requests: int = 0
+    goodput: Optional[float] = None
 
     @property
     def train_throughput(self) -> float:

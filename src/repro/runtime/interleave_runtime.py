@@ -50,11 +50,17 @@ class ManagedInterleaveRuntime:
                  trace: Optional[ArrivalTrace] = None,
                  clock: Optional[Clock] = None,
                  servers: Optional[Sequence] = None,
-                 bss: Optional[Sequence[int]] = None):
+                 bss: Optional[Sequence[int]] = None,
+                 admission=None):
         """``trace`` defaults to the config's uniform-rate arrivals. For a
         merged multi-tenant trace pass ``servers`` (one per stream, in
         stream-id order) and optionally per-stream ``bss``; ``run`` then
-        returns one report per tenant."""
+        returns one report per tenant. ``admission`` is an optional
+        trace-trimming gate (``AdmissionPolicy.gate(...)``) applied to a
+        single-stream trace before serving: ``gate(trace) ->
+        (admitted_trace, n_shed)``, the shed count landing on the report's
+        ``shed_requests`` — so a FakeClock runtime run sheds the identical
+        request set as the engine-side admission mask."""
         self.trainer = trainer
         self.servers = list(servers) if servers is not None else [server]
         self.cfg = cfg
@@ -67,6 +73,13 @@ class ManagedInterleaveRuntime:
         self.bss = [int(b) for b in bss] if bss is not None \
             else [cfg.infer_bs] * len(self.servers)
         self.t_tr = trainer.train_minibatch_time() if trainer else float("inf")
+        self.admission = admission
+        self.shed_requests = 0
+        if admission is not None:
+            if self.trace.stream_ids is not None:
+                raise ValueError("runtime admission gates single-stream "
+                                 "traces only")
+            self.trace, self.shed_requests = admission(self.trace)
 
     def _infer(self, j: int) -> None:
         out = self.servers[j].infer()
@@ -111,6 +124,7 @@ class ManagedInterleaveRuntime:
                    for lat, tr in zip(latencies, traces)]
         if len(reports) == 1:
             reports[0].train_minibatches = trained
+            reports[0].shed_requests = self.shed_requests
             return reports[0]
         return MultiTenantReport(reports, trained, duration, power=0.0,
                                  trace=self.trace)
