@@ -9,7 +9,16 @@ engine's exactness contract); the jax engine is cross-checked against NumPy
 within the documented tolerance (atol=1e-8 s, rtol=1e-9 — see
 ``docs/exactness.md``). Speedups are printed as CSV rows and snapshotted to
 ``benchmarks/results/BENCH_interleave.json`` so they are tracked across PRs,
-mirroring bench_solver's BENCH_solver.json."""
+mirroring bench_solver's BENCH_solver.json.
+
+The ``lane_scaling`` section sweeps the lane axis — 10 to 100k concurrent
+managed lanes sharing one short trace — through ``simulate_batch`` on every
+engine backend (numpy / jax / pallas), recording configs/s per backend so
+the NumPy-vs-accelerator crossover is a measured curve, not folklore.
+``--quick`` caps the sweep at 1k lanes and snapshots to
+``BENCH_interleave_partial.json`` (the committed full snapshot stays
+canonical); ``--check`` gates the result: jax must beat NumPy at 1k lanes
+and every pre-existing snapshot key must still be present."""
 from __future__ import annotations
 
 import time
@@ -18,12 +27,18 @@ from pathlib import Path
 import numpy as np
 
 from repro.core import simulate as S
-from repro.core.backend import jax_available
+from repro.core.backend import jax_available, pallas_available
 
 from benchmarks.bench_interleaving import solve_configs
 from benchmarks.common import DEV, row, snapshot
 
 SNAPSHOT = Path(__file__).parent / "results" / "BENCH_interleave.json"
+QUICK_SNAPSHOT = SNAPSHOT.with_name("BENCH_interleave_partial.json")
+
+LANE_COUNTS = (10, 100, 1000, 10000, 100000)
+QUICK_LANE_COUNTS = (10, 100, 1000)
+# the lane-count at which the --check gate requires jax >= NumPy configs/s
+GATE_LANES = 1000
 
 SCALAR = {"managed": S.managed_scalar,
           "native": lambda *a: S.native_scalar(*a, seed=0),
@@ -41,7 +56,69 @@ def _time(sims, repeats: int) -> float:
     return (time.perf_counter() - t0) / repeats
 
 
-def run(full: bool = False) -> list[str]:
+def _lane_scaling(w_tr, w_in, solved, lane_counts) -> dict:
+    """Sweep the lane axis through simulate_batch on every engine backend.
+
+    All lanes share ONE short trace object (~128 arrivals) so the 100k-lane
+    point measures engine throughput, not trace-generation memory; (pm, bs)
+    cycle through the GMD-planned configs so event shapes stay realistic."""
+    trace = S.ArrivalTrace.poisson(32.0, 4.0, seed=7)
+    pms = [p.pm for _, p, _ in solved]
+    bss = [p.bs for _, p, _ in solved]
+    backends = ["numpy"]
+    if jax_available():
+        backends.append("jax")
+    if pallas_available():
+        backends.append("pallas")
+    rows = []
+    for lanes in lane_counts:
+        pml = [pms[i % len(pms)] for i in range(lanes)]
+        bsl = [bss[i % len(bss)] for i in range(lanes)]
+        traces = [trace] * lanes
+        args = (DEV, w_tr, w_in, pml, bsl, traces)
+        rec = {"lanes": lanes, "configs": lanes}
+        for bk in backends:
+            S.simulate_batch(*args, backend=bk)          # warm jit / caches
+            t0 = time.perf_counter()
+            S.simulate_batch(*args, backend=bk)
+            rec[f"{bk}_configs_per_s"] = lanes / (time.perf_counter() - t0)
+        rows.append(rec)
+    return {"trace_arrivals": len(trace), "backends": backends,
+            "lane_counts": list(lane_counts), "rows": rows}
+
+
+# top-level snapshot keys every run must produce — the --check gate's
+# byte-identity floor for pre-existing BENCH structure
+_REQUIRED_KEYS = ("configs", "duration_s", "requests_total", "approaches",
+                  "scalar_s", "vector_s", "speedup")
+_APPROACH_KEYS = ("configs", "scalar_s", "vector_s", "speedup")
+
+
+def check(results: dict) -> None:
+    """--check gate: pre-existing snapshot structure intact, and the jax
+    engine at least matches NumPy throughput at the 1k-lane point."""
+    for key in _REQUIRED_KEYS:
+        assert key in results, f"missing snapshot key {key!r}"
+    for name in ("managed", "native", "streams"):
+        app = results["approaches"][name]
+        for key in _APPROACH_KEYS:
+            assert key in app, f"missing approaches.{name}.{key}"
+    if jax_available():
+        for key in ("configs", "numpy_s", "jax_s", "speedup",
+                    "max_abs_latency_diff"):
+            assert key in results["engine_backends"], \
+                f"missing engine_backends.{key}"
+        gate = [r for r in results["lane_scaling"]["rows"]
+                if r["lanes"] == GATE_LANES]
+        assert gate, f"lane_scaling has no {GATE_LANES}-lane row"
+        np_cps = gate[0]["numpy_configs_per_s"]
+        jax_cps = gate[0]["jax_configs_per_s"]
+        assert jax_cps >= np_cps, (
+            f"jax engine lost to NumPy at {GATE_LANES} lanes: "
+            f"{jax_cps:.0f} vs {np_cps:.0f} configs/s")
+
+
+def run(full: bool = False, quick: bool = False) -> list[str]:
     # always measure the full Fig. 2 sweep: the point is paper-scale traces
     w_tr, w_in, configs = solve_configs(duration=120.0)
     solved = [(prob, plan, trace) for _, prob, plan, trace in configs
@@ -115,10 +192,37 @@ def run(full: bool = False) -> list[str]:
                         f"numpy={numpy_s*1e3:.1f}ms;jax={jax_s*1e3:.1f}ms;"
                         f"n={len(solved)}"))
 
-    snapshot(SNAPSHOT, results, configs=len(solved) * 3)
+    # -- lane scaling: the NumPy-vs-jax-vs-Pallas crossover curve ------------
+    lane_counts = QUICK_LANE_COUNTS if quick else LANE_COUNTS
+    results["lane_scaling"] = _lane_scaling(w_tr, w_in, solved, lane_counts)
+    for rec in results["lane_scaling"]["rows"]:
+        parts = [f"{bk}={rec[f'{bk}_configs_per_s']:.0f}cfg_s"
+                 for bk in results["lane_scaling"]["backends"]]
+        rows.append(row(f"interleave_engine/lane_scaling/{rec['lanes']}",
+                        rec.get("jax_configs_per_s",
+                                rec["numpy_configs_per_s"]),
+                        ";".join(parts)))
+
+    snapshot(QUICK_SNAPSHOT if quick else SNAPSHOT, results,
+             configs=len(solved) * 3)
+    run.last_results = results          # for --check / tests
     return rows
 
 
 if __name__ == "__main__":
-    for r in run():
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="more timing repeats")
+    ap.add_argument("--quick", action="store_true",
+                    help="cap the lane sweep at 1k lanes; snapshot to "
+                         "BENCH_interleave_partial.json")
+    ap.add_argument("--check", action="store_true",
+                    help="assert snapshot structure + jax>=NumPy at 1k lanes")
+    cli = ap.parse_args()
+    for r in run(full=cli.full, quick=cli.quick):
         print(r)
+    if cli.check:
+        check(run.last_results)
+        print("interleave_engine/check,1,"
+              f"jax_ge_numpy_at_{GATE_LANES}_lanes;keys_ok")

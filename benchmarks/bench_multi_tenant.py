@@ -10,6 +10,11 @@ throughput are reported. The executed plan is replayed on both *engine*
 backends too (NumPy reference vs the jax max-plus scan) and cross-checked
 within the documented tolerance (``docs/exactness.md``). Rows are printed as
 CSV and snapshotted to ``benchmarks/results/BENCH_multi_tenant.json``.
+
+The ``lane_scaling`` section mirrors bench_interleave_engine's: 10 to 100k
+two-stream multi-tenant lanes (shared traces) through
+``simulate_multi_tenant_batch`` on every engine backend, recording the
+NumPy-vs-jax-vs-Pallas configs/s crossover on the N-stream path.
 """
 from __future__ import annotations
 
@@ -19,7 +24,8 @@ from pathlib import Path
 import numpy as np
 
 from repro.core import problem as P
-from repro.core.backend import jax_available
+from repro.core import simulate as S
+from repro.core.backend import jax_available, pallas_available
 from repro.core.device_model import INFER_WORKLOADS, TRAIN_WORKLOADS
 from repro.core.scheduler import Fulcrum
 
@@ -27,6 +33,8 @@ from benchmarks.common import DEV, ORACLE, SPACE, loss_pct, median, row, \
     snapshot
 
 SNAPSHOT = Path(__file__).parent / "results" / "BENCH_multi_tenant.json"
+
+LANE_COUNTS = (10, 100, 1000, 10000, 100000)
 
 # per-stream (rate, latency budget) matched to each DNN's service time scale
 STREAM_DEFAULTS = {
@@ -68,6 +76,39 @@ def _problem_grid(specs: tuple, full: bool) -> list:
                     for s in specs)
                 probs.append(P.MultiTenantProblem(float(pb), streams))
     return probs
+
+
+def _lane_scaling(lane_counts=LANE_COUNTS) -> dict:
+    """Lane-axis sweep of the N-stream engine: every lane is the same
+    2-stream (mobilenet + lstm) scenario over two shared short traces, with
+    (pm, per-stream bs) cycling so event shapes vary realistically."""
+    w_tr = TRAIN_WORKLOADS["mobilenet"]
+    streams = [INFER_WORKLOADS["mobilenet"], INFER_WORKLOADS["lstm"]]
+    tr_a = S.ArrivalTrace.poisson(20.0, 4.0, seed=11)
+    tr_b = S.ArrivalTrace.poisson(12.0, 4.0, seed=13)
+    modes = SPACE.all_modes()
+    bs_cycle = [[4, 8], [8, 16], [16, 4], [32, 8]]
+    backends = ["numpy"]
+    if jax_available():
+        backends.append("jax")
+    if pallas_available():
+        backends.append("pallas")
+    rows = []
+    for lanes in lane_counts:
+        args = (DEV, w_tr, [streams] * lanes,
+                [modes[(7 * i) % len(modes)] for i in range(lanes)],
+                [bs_cycle[i % len(bs_cycle)] for i in range(lanes)],
+                [[tr_a, tr_b]] * lanes)
+        rec = {"lanes": lanes, "configs": lanes}
+        for bk in backends:
+            S.simulate_multi_tenant_batch(*args, backend=bk)   # warm
+            t0 = time.perf_counter()
+            S.simulate_multi_tenant_batch(*args, backend=bk)
+            rec[f"{bk}_configs_per_s"] = lanes / (time.perf_counter() - t0)
+        rows.append(rec)
+    return {"trace_arrivals": len(tr_a) + len(tr_b), "n_streams": 2,
+            "backends": backends, "lane_counts": list(lane_counts),
+            "rows": rows}
 
 
 def run(full: bool = False) -> list[str]:
@@ -165,11 +206,27 @@ def run(full: bool = False) -> list[str]:
     results["configs"] = total
     rows.append(row("multi_tenant/total_configs", total,
                     f"combos={len(results['rows'])}"))
+
+    # -- lane scaling: N-stream engine crossover curve -----------------------
+    results["lane_scaling"] = _lane_scaling()
+    for rec in results["lane_scaling"]["rows"]:
+        parts = [f"{bk}={rec[f'{bk}_configs_per_s']:.0f}cfg_s"
+                 for bk in results["lane_scaling"]["backends"]]
+        rows.append(row(f"multi_tenant/lane_scaling/{rec['lanes']}",
+                        rec.get("jax_configs_per_s",
+                                rec["numpy_configs_per_s"]),
+                        ";".join(parts)))
+
     snapshot(SNAPSHOT, results, configs=total)
     rows.append(row("multi_tenant/snapshot", 1, str(SNAPSHOT)))
     return rows
 
 
 if __name__ == "__main__":
-    for r in run():
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale problem grids")
+    cli = ap.parse_args()
+    for r in run(full=cli.full):
         print(r)

@@ -1,38 +1,52 @@
-"""Shared NumPy/jax backend plumbing for the batched engines.
+"""Shared NumPy/jax/Pallas backend plumbing for the batched engines.
 
-Both vectorized layers — the grid-evaluation solvers (``core.grid_eval``) and
-the trace-driven execution engine (``core.simulate``) — expose the same two
-backends: ``"numpy"`` (the reference implementation, always available) and
-``"jax"`` (jit + vmap, runs on-accelerator). This module centralizes the
-selection rules so every entry point behaves identically:
+The vectorized layers — the grid-evaluation solvers (``core.grid_eval``) and
+the trace-driven execution engine (``core.simulate``) — share a backend
+vocabulary resolved here so every entry point behaves identically:
 
- * ``check_backend``   — validate an explicit backend name.
- * ``jax_available``   — cached import probe; monkeypatchable in tests.
- * ``resolve_backend`` — map a request (``None`` / ``"numpy"`` / ``"jax"``)
-   to the backend that will actually run. ``None`` defers to the
+ * ``"numpy"``  — the reference implementation, always available.
+ * ``"jax"``    — jit + vmap programs, runs on-accelerator.
+ * ``"pallas"`` — the engine's hand-written Pallas kernels
+   (``src/repro/kernels/fulcrum/``); engine-only — the grid solvers accept
+   ``numpy``/``jax`` (their masked reductions have no hand-written kernel).
+
+Selection rules:
+
+ * ``check_backend``     — validate an explicit backend name against the
+   caller's allowed set.
+ * ``jax_available`` / ``pallas_available`` — cached import probes;
+   monkeypatchable in tests.
+ * ``resolve_backend``   — map a request (``None`` / a backend name) to the
+   backend that will actually run. ``None`` defers to the
    ``FULCRUM_ENGINE_BACKEND`` environment variable and **defaults to NumPy**;
-   an env-var ``jax`` request silently falls back to NumPy when jax is
-   missing (the default path must never fail), while an *explicit*
-   ``backend="jax"`` argument raises, so a caller that asked for the
-   accelerator is told it is absent.
- * ``require_jax``     — the lazy jax import used by both jax kernels, with
+   an env-var request degrades down the tier order pallas → jax → numpy when
+   the requested tier is missing (the default path must never fail), while an
+   *explicit* backend argument raises, so a caller that asked for an
+   accelerator tier is told it is absent.
+ * ``require_jax``       — the lazy jax import used by the jax kernels, with
    one shared error message.
 
-The reference-backend invariant (NumPy results are authoritative; jax is
-cross-checked against them) is documented in ``docs/exactness.md``.
+The reference-backend invariant (NumPy results are authoritative; jax and
+Pallas are cross-checked against them) is documented in ``docs/exactness.md``.
 """
 from __future__ import annotations
 
 import os
-from typing import Optional
+from typing import Optional, Sequence
 
 #: Environment variable consulted when no explicit backend is requested.
 ENGINE_BACKEND_ENV = "FULCRUM_ENGINE_BACKEND"
 
-_JAX_OK: Optional[bool] = None      # memoized import probe (tests patch this)
+#: Engine tiers, fastest-intent first; resolve_backend degrades rightward.
+BACKEND_TIERS = ("pallas", "jax", "numpy")
+
+_JAX_OK: Optional[bool] = None      # memoized import probes (tests patch)
+_PALLAS_OK: Optional[bool] = None
 
 _JAX_MISSING_MSG = ("backend='jax' requires jax; "
                     "use the default NumPy backend")
+_PALLAS_MISSING_MSG = ("backend='pallas' requires jax.experimental.pallas; "
+                       "use the 'jax' or default NumPy backend")
 
 
 def jax_available() -> bool:
@@ -47,9 +61,30 @@ def jax_available() -> bool:
     return _JAX_OK
 
 
-def check_backend(backend: str) -> None:
-    if backend not in ("numpy", "jax"):
-        raise ValueError(f"unknown backend {backend!r}; use 'numpy' or 'jax'")
+def pallas_available() -> bool:
+    """True when the Pallas kernel tier can run: jax imports *and*
+    ``jax.experimental.pallas`` is present (interpret mode makes it runnable
+    on CPU — no TPU needed; see ``src/repro/kernels/fulcrum/``)."""
+    global _PALLAS_OK
+    if _PALLAS_OK is None:
+        if not jax_available():
+            _PALLAS_OK = False
+        else:
+            try:
+                from jax.experimental import pallas  # noqa: F401
+                _PALLAS_OK = True
+            except Exception:
+                _PALLAS_OK = False
+    return _PALLAS_OK
+
+
+def check_backend(backend: str,
+                  allowed: Sequence[str] = BACKEND_TIERS) -> None:
+    """Validate an explicit backend name against the caller's allowed set
+    (the grid solvers pass ``("numpy", "jax")`` — no Pallas solver tier)."""
+    if backend not in allowed:
+        raise ValueError(f"unknown backend {backend!r}; "
+                         f"use one of {'/'.join(repr(a) for a in allowed)}")
 
 
 def resolve_backend(backend: Optional[str] = None,
@@ -57,14 +92,18 @@ def resolve_backend(backend: Optional[str] = None,
     """Resolve a backend request to the backend that will run.
 
     ``None`` reads ``env`` (default ``"numpy"``, the bitwise/exact reference)
-    and degrades an env-level ``jax`` request to ``"numpy"`` when jax is
-    unavailable. An explicit ``"jax"`` argument raises ``RuntimeError``
-    instead of degrading.
+    and degrades an env-level request down the pallas → jax → numpy tier
+    order when the requested tier is unavailable. An explicit ``"jax"`` /
+    ``"pallas"`` argument raises ``RuntimeError`` instead of degrading.
     """
     defaulted = backend is None
     if defaulted:
         backend = os.environ.get(env, "").strip().lower() or "numpy"
     check_backend(backend)
+    if backend == "pallas" and not pallas_available():
+        if not defaulted:
+            raise RuntimeError(_PALLAS_MISSING_MSG)
+        backend = "jax"                       # degrade one tier and re-check
     if backend == "jax" and not jax_available():
         if defaulted:
             return "numpy"
@@ -74,7 +113,7 @@ def resolve_backend(backend: Optional[str] = None,
 
 def require_jax():
     """Import (jax, jax.numpy, enable_x64), raising the shared message when
-    jax is absent. Both kernel caches build through this."""
+    jax is absent. The jax and Pallas kernel caches build through this."""
     try:
         import jax
         import jax.numpy as jnp

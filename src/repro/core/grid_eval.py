@@ -32,7 +32,13 @@ against randomized grids and the full 441 x 5 sweep. The jax backend runs
 the same reductions under ``enable_x64`` (masked argmin/argmax are
 reassociation-free, so it stays bitwise-equal too — unlike the execution
 engine's scan, see ``docs/exactness.md``). Backend names are validated by
-the shared ``core.backend`` plumbing, also used by ``core.simulate``.
+the shared ``core.backend`` plumbing, also used by ``core.simulate`` — the
+solvers accept only the "numpy"/"jax" tiers (the "pallas" tier is an
+execution-engine backend; there is no Pallas solver kernel, so asking for
+it here is a ``ValueError`` rather than a silent NumPy fallback). Ragged
+final problem chunks are padded to power-of-two row buckets before hitting
+the jit kernels, so sweeping many batch sizes reuses a handful of
+compilations — ``solver_trace_count()`` exposes the retrace counter.
 """
 from __future__ import annotations
 
@@ -253,6 +259,21 @@ def _chunks(n_problems: int, n_obs: int):
         yield s, min(n_problems, s + step)
 
 
+def _pad_problems(*arrs: np.ndarray) -> tuple[np.ndarray, ...]:
+    """Pad problem-axis arrays to a power-of-two row count (floor 8) by
+    repeating the last row. Full chunks share one jit compilation already;
+    this buckets the ragged *final* chunk of each sweep too, so the jax
+    kernels compile O(log) distinct shapes instead of one per sweep size.
+    Padded rows are duplicated real problems — callers slice kernel outputs
+    back to the true row count and never read the padding's answers."""
+    m = arrs[0].shape[0]
+    m_pad = max(8, 1 << max(0, m - 1).bit_length())
+    if m_pad == m:
+        return arrs
+    return tuple(np.concatenate([a, np.repeat(a[-1:], m_pad - m, axis=0)])
+                 for a in arrs)
+
+
 def _problem_cols(problems, *fields) -> list[np.ndarray]:
     return [np.fromiter((getattr(pr, f) for pr in problems),
                         np.float64, len(problems)) for f in fields]
@@ -288,7 +309,7 @@ def solve_train_batch(problems: Sequence[P.TrainProblem],
     """Batched ``problem.solve_train``: argmax theta_tr s.t. p <= p-hat for
     every problem at once. Returns one Optional[Solution] per problem,
     bitwise identical to the scalar loop."""
-    check_backend(backend)
+    check_backend(backend, ("numpy", "jax"))
     grid = as_train_grid(obs)
     out: list[Optional[P.Solution]] = [None] * len(problems)
     if not len(grid) or not len(problems):
@@ -297,8 +318,9 @@ def solve_train_batch(problems: Sequence[P.TrainProblem],
     if backend == "jax":
         kern = _jax_kernels()["train"]
         for s, e in _chunks(len(problems), len(grid)):
-            idx, ok = kern(grid.t, grid.p, budgets[s:e])
-            for k in np.flatnonzero(ok):
+            bud, = _pad_problems(budgets[s:e])
+            idx, ok = kern(grid.t, grid.p, bud)
+            for k in np.flatnonzero(ok[:e - s]):
                 i = int(idx[k])
                 t = float(grid.t[i])
                 out[s + k] = P.Solution(pm=grid.modes[i], time=t,
@@ -323,7 +345,7 @@ def solve_infer_batch(problems: Sequence[P.InferProblem],
                       backend: str = "numpy") -> list[Optional[P.Solution]]:
     """Batched ``problem.solve_infer``: argmin peak latency s.t. power,
     latency, and sustainability constraints, over a batch of problems."""
-    check_backend(backend)
+    check_backend(backend, ("numpy", "jax"))
     grid = as_infer_grid(obs)
     out: list[Optional[P.Solution]] = [None] * len(problems)
     if not len(grid) or not len(problems):
@@ -334,9 +356,9 @@ def solve_infer_batch(problems: Sequence[P.InferProblem],
     if backend == "jax":
         kern = _jax_kernels()["infer"]
         for s, e in _chunks(len(problems), len(grid)):
-            idx, ok, lam_sel = kern(grid.t, grid.p, bsf,
-                                    pb[s:e], lb[s:e], ar[s:e])
-            for k in np.flatnonzero(ok):
+            pbc, lbc, arc = _pad_problems(pb[s:e], lb[s:e], ar[s:e])
+            idx, ok, lam_sel = kern(grid.t, grid.p, bsf, pbc, lbc, arc)
+            for k in np.flatnonzero(ok[:e - s]):
                 i = int(idx[k])
                 out[s + k] = P.Solution(pm=grid.modes[i], bs=int(grid.bs[i]),
                                         time=float(lam_sel[k, i]),
@@ -391,7 +413,7 @@ def solve_concurrent_batch(problems: Sequence[P.ConcurrentProblem],
     """Batched ``problem.solve_concurrent``: lexicographic argmax of
     (training throughput, -peak latency) under the interleaving feasibility
     mask, for every problem at once."""
-    check_backend(backend)
+    check_backend(backend, ("numpy", "jax"))
     tg = as_train_grid(train_obs)
     ig = as_infer_grid(infer_obs)
     out: list[Optional[P.Solution]] = [None] * len(problems)
@@ -406,9 +428,10 @@ def solve_concurrent_batch(problems: Sequence[P.ConcurrentProblem],
     if backend == "jax":
         kern = _jax_kernels()["concurrent"]
         for s, e in _chunks(len(problems), len(ig)):
+            pbc, lbc, arc = _pad_problems(pb[s:e], lb[s:e], ar[s:e])
             idx, ok, tau_c, theta_c, lam_c = kern(
-                ig.t, bsf, t_tr, pmax, valid, pb[s:e], lb[s:e], ar[s:e])
-            for k in np.flatnonzero(ok):
+                ig.t, bsf, t_tr, pmax, valid, pbc, lbc, arc)
+            for k in np.flatnonzero(ok[:e - s]):
                 i = int(idx[k])
                 out[s + k] = P.Solution(
                     pm=ig.modes[i], bs=int(ig.bs[i]), tau_tr=int(tau_c[k, i]),
@@ -584,7 +607,7 @@ def solve_multi_tenant_batch(problems: Sequence["P.MultiTenantProblem"],
     """Batched ``problem.solve_multi_tenant``: every problem must share the
     stream count, train flag, and per-stream batch-size restrictions; rates,
     latency budgets, and power budgets vary per problem."""
-    check_backend(backend)
+    check_backend(backend, ("numpy", "jax"))
     out: list[Optional[P.MultiTenantSolution]] = [None] * len(problems)
     if not len(problems):
         return out
@@ -650,8 +673,9 @@ def _solve_multi_jax(problems, cand: "_MultiCandidates", pb, ar, lb, out):
     args = (cand.t_in, cand.bsf, cand.pmax) + (
         (cand.t_tr,) if cand.t_tr is not None else ())
     for s, e in _chunks(len(problems), cand.K * cand.n):
-        idx, ok, tau_s, theta_s, lam_s = kern(*args, pb[s:e], ar[s:e], lb[s:e])
-        for k in np.flatnonzero(ok):
+        pbc, arc, lbc = _pad_problems(pb[s:e], ar[s:e], lb[s:e])
+        idx, ok, tau_s, theta_s, lam_s = kern(*args, pbc, arc, lbc)
+        for k in np.flatnonzero(ok[:e - s]):
             i = int(idx[k])
             out[s + k] = P.MultiTenantSolution(
                 pm=cand.modes[i], bss=tuple(int(b) for b in cand.bss[i]),
@@ -669,6 +693,15 @@ def _solve_multi_jax(problems, cand: "_MultiCandidates", pb, ar, lb, out):
 
 _JAX_CACHE: dict = {}
 
+# retrace counter, bumped inside the traced kernel bodies (fires at
+# compile time only). Mirrors simulate.engine_trace_count().
+_TRACE_COUNTS = {"solver": 0}
+
+
+def solver_trace_count() -> int:
+    """Number of solver-kernel (re)traces since import (all five kernels)."""
+    return _TRACE_COUNTS["solver"]
+
 
 def _jax_kernels() -> dict:
     if _JAX_CACHE:
@@ -677,6 +710,7 @@ def _jax_kernels() -> dict:
 
     @jax.jit
     def train_kernel(t, p, budgets):
+        _TRACE_COUNTS["solver"] += 1           # fires at trace time only
         def one(b):
             feas = p <= b
             masked = jnp.where(feas, t, jnp.inf)
@@ -685,6 +719,7 @@ def _jax_kernels() -> dict:
 
     @jax.jit
     def infer_kernel(t, p, bsf, pb, lb, ar):
+        _TRACE_COUNTS["solver"] += 1
         def one(b_p, b_l, b_a):
             lam = (bsf - 1.0) / b_a + t
             feas = (p <= b_p) & (t <= bsf / b_a) & (lam <= b_l)
@@ -694,6 +729,7 @@ def _jax_kernels() -> dict:
 
     @jax.jit
     def concurrent_kernel(t_in, bsf, t_tr, pmax, valid, pb, lb, ar):
+        _TRACE_COUNTS["solver"] += 1
         def one(b_p, b_l, b_a):
             cycle = bsf / b_a
             lam = (bsf - 1.0) / b_a + t_in
@@ -742,11 +778,13 @@ def _jax_kernels() -> dict:
 
     @jax.jit
     def multi_train_kernel(t_in, bsf, pmax, t_tr, pb, ar, lb):
+        _TRACE_COUNTS["solver"] += 1
         return jax.vmap(lambda p, a, l: _multi_one(
             t_in, bsf, pmax, t_tr, p, a, l))(pb, ar, lb)
 
     @jax.jit
     def multi_infer_kernel(t_in, bsf, pmax, pb, ar, lb):
+        _TRACE_COUNTS["solver"] += 1
         return jax.vmap(lambda p, a, l: _multi_one(
             t_in, bsf, pmax, None, p, a, l))(pb, ar, lb)
 

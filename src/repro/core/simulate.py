@@ -55,17 +55,36 @@ Backends (contract; see ``docs/exactness.md`` for the full ladder):
    *tolerance-checked* against NumPy (|Δlatency| ≲ K·eps·T, enforced at
    atol=1e-8 s / rtol=1e-9 by ``tests/test_simulate.py``; train-minibatch
    counts may differ only on quotient-boundary cases), **not** bitwise.
-   Backend selection follows ``core.backend.resolve_backend``: ``None``
-   defers to ``FULCRUM_ENGINE_BACKEND`` and degrades to NumPy when jax is
-   unavailable. Reports from the batched paths are built by one vectorized
-   report builder: a single padded sort fills every lane's quantile /
-   violation-rate cache.
+ * ``backend="pallas"`` — the same contract served by the hand-written
+   Pallas kernels (``repro.kernels.fulcrum``): a lane-blocked Hillis-Steele
+   max-plus scan fused with the slack-fill count, and the report builder's
+   per-lane padded sort as a bitonic network. Same tolerance rung as jax
+   (the sort itself is a pure permutation — checked for equality);
+   ``interpret=True`` off-TPU, so the kernels run on CPU CI.
+
+Backend selection follows ``core.backend.resolve_backend``: ``None`` defers
+to ``FULCRUM_ENGINE_BACKEND`` and degrades pallas → jax → numpy when a tier
+is unavailable. Reports from the batched paths are built by one vectorized
+report builder: a chunked padded sort fills every lane's quantile /
+violation-rate cache.
+
+Lane scaling (10⁴–10⁵ lanes): the accelerator paths never materialize one
+giant padded matrix — lanes are dispatched in ``_LANE_CHUNK``-sized chunks
+padded to power-of-two lane buckets and one *global* power-of-two event
+count, so every chunk of a sweep (and of the next sweep) hits the same
+compiled program. The compiled kernels live in module-level caches keyed by
+backend (jit itself caches per padded shape); ``engine_trace_count()``
+exposes a retrace counter so tests can pin the no-retrace contract. Scan
+input buffers are donated (``donate_argnums``) — they are per-call padded
+copies, never reused host-side.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import math
 import random
+import warnings
 from typing import Callable, Optional, Sequence
 
 import numpy as np
@@ -437,18 +456,18 @@ def _latencies(completions: np.ndarray, times: np.ndarray,
     return np.repeat(completions, bs) - times[:completions.size * bs]
 
 
-def _presort_reports(reports: Sequence[ExecutionReport]) -> None:
-    """Batched report builder: fill every report's quantile/violation cache
-    with ONE vectorized sort over a padded (lane, request) matrix, so
-    per-lane statistics of a batch are computed vectorized rather than one
-    Python-level sort per report. +inf padding keeps each lane's real
-    latencies as the leading prefix after the sort."""
-    lats = [np.asarray(r.latencies, np.float64) for r in reports]
-    R = max((a.size for a in lats), default=0)
-    if R == 0:
-        for r in reports:
-            r._sorted = np.empty(0)
-        return
+# Cap on lanes x requests elements per padded sort matrix: ~32 MB float64.
+# One full-batch matrix at 10^5 ragged lanes would not survive; chunking
+# keeps peak memory flat and lets each chunk pad to its OWN max length.
+_SORT_CHUNK_ELEMS = 4 << 20
+
+
+def _sort_lane_chunk(lats: list[np.ndarray], reports, backend: str) -> None:
+    """Sort one chunk of lanes through a padded (lane, request) matrix.
+    Sorting permutes values — the sorted arrays are identical float64
+    multisets whichever backend sorts, so the NumPy path stays bitwise and
+    the Pallas bitonic kernel is interchangeable (equality-checked)."""
+    R = max(a.size for a in lats)
     total = sum(a.size for a in lats)
     if len(lats) * R > 4 * total:      # highly ragged: padding would cost
         for r, a in zip(reports, lats):        # far more than it batches
@@ -457,10 +476,41 @@ def _presort_reports(reports: Sequence[ExecutionReport]) -> None:
     mat = np.full((len(lats), R), np.inf)
     for i, a in enumerate(lats):
         mat[i, :a.size] = a
-    mat.sort(axis=1)
+    if backend == "pallas":
+        mat = np.asarray(_pallas_lane_sort()(mat))
+    else:
+        mat.sort(axis=1)
     for i, (r, a) in enumerate(zip(reports, lats)):
         # copy: a view would pin the whole padded matrix per report
         r._sorted = mat[i, :a.size].copy()
+
+
+def _presort_reports(reports: Sequence[ExecutionReport],
+                     backend: str = "numpy") -> None:
+    """Batched report builder: fill every report's quantile/violation cache
+    with chunked vectorized sorts over padded (lane, request) matrices, so
+    per-lane statistics of a batch are computed vectorized rather than one
+    Python-level sort per report. +inf padding keeps each lane's real
+    latencies as the leading prefix after the sort; chunks are cut so no
+    padded matrix exceeds ``_SORT_CHUNK_ELEMS`` elements (each chunk pads to
+    its own max length, so one long lane cannot inflate the whole batch).
+    ``backend="pallas"`` routes the chunk sorts through the bitonic lane-sort
+    kernel — identical sorted values, NumPy remains the bitwise reference."""
+    lats = [np.asarray(r.latencies, np.float64) for r in reports]
+    if max((a.size for a in lats), default=0) == 0:
+        for r in reports:
+            r._sorted = np.empty(0)
+        return
+    i = 0
+    while i < len(lats):
+        j, width = i + 1, max(lats[i].size, 1)
+        while j < len(lats):
+            width = max(width, lats[j].size)
+            if (j + 1 - i) * width > _SORT_CHUNK_ELEMS:
+                break
+            j += 1
+        _sort_lane_chunk(lats[i:j], reports[i:j], backend)
+        i = j
 
 
 def _time_power(device: DeviceModel, w: WorkloadProfile, pm: PowerMode,
@@ -572,16 +622,45 @@ ENGINES: dict[str, Callable[..., ExecutionReport]] = {
 
 
 # ---------------------------------------------------------------------------
-# jax backend: the managed kernel as a vmapped max-plus associative scan.
+# jax / pallas backends: the managed kernel as a vmapped max-plus scan.
 # c_k = max(c_{k-1}, ready_k) + e_k is the composition of affine max-plus
 # maps f_k(x) = max(x + a_k, b_k) with a_k = e_k, b_k = ready_k + e_k;
 # (f_r . f_l) keeps that form with (a, b) = (a_l + a_r, max(b_l + a_r, b_r)),
 # so an associative scan over the (a, b) pairs yields every prefix
 # composition, and c_k = prefix_k applied to c_0 = 0 = max(A_k, B_k).
 # Lanes are padded with ready = +inf, exec = 0 (absorbing for both ops).
+# The "jax" tier uses jax.lax.associative_scan; the "pallas" tier the
+# hand-written lane-blocked kernel (repro.kernels.fulcrum.maxplus_scan).
 # ---------------------------------------------------------------------------
 
+# compiled scan runners, keyed by backend tier ("managed" = the jax tier's
+# historical key, kept so tests/monkeypatches keep working; "pallas" = the
+# Pallas kernel wrapper; "lane_sort" = the report builder's bitonic sort)
 _JAX_ENGINE_CACHE: dict = {}
+
+# lanes dispatched per compiled call: bounds the padded chunk matrix to
+# _LANE_CHUNK x K_pad floats (~4 MB at K=64) however many lanes a sweep has
+_LANE_CHUNK = 8192
+
+# retrace counters: bumped inside traced function bodies, so they count
+# compilations (trace-time side effects), not calls. engine_trace_count()
+# lets tests pin the shape-bucketing no-retrace contract.
+_TRACE_COUNTS = {"engine": 0}
+
+
+def engine_trace_count() -> int:
+    """Number of scan-kernel (re)traces since import, across backends."""
+    return _TRACE_COUNTS["engine"]
+
+
+@contextlib.contextmanager
+def _quiet_donation():
+    # donation is best-effort: on CPU XLA may decline a buffer and warn.
+    # The fallback (a copy) is exactly the pre-donation behavior.
+    with warnings.catch_warnings():
+        warnings.filterwarnings(
+            "ignore", message="Some donated buffers were not usable")
+        yield
 
 
 def _jax_engine() -> Callable:
@@ -606,10 +685,16 @@ def _jax_engine() -> Callable:
         fills = jnp.where(jnp.isfinite(ready), fills, 0.0)
         return c, fills.sum()
 
-    kernel = jax.jit(jax.vmap(one_lane))
+    def batch(ready, exec_t, t_tr, tau_cap, clock):
+        _TRACE_COUNTS["engine"] += 1           # fires at trace time only
+        return jax.vmap(one_lane)(ready, exec_t, t_tr, tau_cap, clock)
+
+    # the padded event buffers are fresh per-call copies — donate them so
+    # XLA reuses the allocation instead of holding both live
+    kernel = jax.jit(batch, donate_argnums=(0, 1))
 
     def run(ready, exec_t, t_tr, tau_cap, clock):
-        with enable_x64():
+        with enable_x64(), _quiet_donation():
             c, trained = kernel(jnp.asarray(ready), jnp.asarray(exec_t),
                                 jnp.asarray(t_tr), jnp.asarray(tau_cap),
                                 jnp.asarray(clock))
@@ -619,19 +704,107 @@ def _jax_engine() -> Callable:
     return run
 
 
-def _pad_lanes(readies: Sequence[np.ndarray],
-               execs: Sequence[np.ndarray]) -> tuple[np.ndarray, np.ndarray]:
-    """Stack ragged per-lane event vectors into (lanes, K_pad) arrays. K_pad
-    is the next power of two so trace-length jitter across calls reuses a
-    handful of jit compilations instead of one per distinct length."""
-    k_max = max((r.size for r in readies), default=0)
-    k_pad = max(8, 1 << max(0, k_max - 1).bit_length())
-    ready = np.full((len(readies), k_pad), np.inf)
-    exec_t = np.zeros((len(readies), k_pad))
+def _pallas_engine() -> Callable:
+    """The Pallas-tier scan runner: same contract as ``_jax_engine``'s, the
+    arithmetic done by the hand-written lane-blocked kernel. Jitted so the
+    interpret-mode kernel body is traced once per padded shape (and so the
+    retrace counter counts its compilations the same way)."""
+    if "pallas" in _JAX_ENGINE_CACHE:
+        return _JAX_ENGINE_CACHE["pallas"]
+    jax, jnp, enable_x64 = require_jax()
+    from repro.kernels.fulcrum.maxplus_scan import maxplus_scan
+
+    def batch(ready, exec_t, t_tr, tau_cap, clock):
+        _TRACE_COUNTS["engine"] += 1           # fires at trace time only
+        return maxplus_scan(ready, exec_t, t_tr, tau_cap, clock)
+
+    kernel = jax.jit(batch, donate_argnums=(0, 1))
+
+    def run(ready, exec_t, t_tr, tau_cap, clock):
+        with enable_x64(), _quiet_donation():
+            c, trained = kernel(jnp.asarray(ready), jnp.asarray(exec_t),
+                                jnp.asarray(t_tr), jnp.asarray(tau_cap),
+                                jnp.asarray(clock))
+        return np.asarray(c), np.asarray(trained)
+
+    _JAX_ENGINE_CACHE["pallas"] = run
+    return run
+
+
+def _pallas_lane_sort() -> Callable:
+    """Jitted wrapper of the bitonic lane-sort kernel (report builder)."""
+    if "lane_sort" in _JAX_ENGINE_CACHE:
+        return _JAX_ENGINE_CACHE["lane_sort"]
+    jax, jnp, enable_x64 = require_jax()
+    from repro.kernels.fulcrum.lane_sort import lane_sort
+    kernel = jax.jit(lane_sort, donate_argnums=(0,))
+
+    def run(mat):
+        with enable_x64(), _quiet_donation():
+            return np.asarray(kernel(jnp.asarray(mat)))
+
+    _JAX_ENGINE_CACHE["lane_sort"] = run
+    return run
+
+
+def _pow2(n: int, floor: int = 8) -> int:
+    return max(floor, 1 << max(0, n - 1).bit_length())
+
+
+def _pad_lanes(readies: Sequence[np.ndarray], execs: Sequence[np.ndarray],
+               lanes_pad: Optional[int] = None,
+               k_pad: Optional[int] = None) -> tuple[np.ndarray, np.ndarray]:
+    """Stack ragged per-lane event vectors into (lanes_pad, k_pad) arrays.
+    Both axes default to the next power of two so trace-length and
+    lane-count jitter across calls reuses a handful of jit compilations
+    instead of one per distinct shape. Padding lanes/events are absorbing
+    (ready = +inf, exec = 0)."""
+    if k_pad is None:
+        k_pad = _pow2(max((r.size for r in readies), default=0))
+    if lanes_pad is None:
+        lanes_pad = _pow2(len(readies))
+    ready = np.full((lanes_pad, k_pad), np.inf)
+    exec_t = np.zeros((lanes_pad, k_pad))
     for i, (r, e) in enumerate(zip(readies, execs)):
         ready[i, :r.size] = r
         exec_t[i, :e.size] = e
     return ready, exec_t
+
+
+def _run_engine(backend: str, readies: Sequence[np.ndarray],
+                execs: Sequence[np.ndarray], t_trs: np.ndarray,
+                tau_caps: np.ndarray, clocks: np.ndarray,
+                ) -> tuple[list[np.ndarray], np.ndarray]:
+    """Chunked lane dispatch for the accelerator scan tiers.
+
+    Lanes run in ``_LANE_CHUNK``-sized chunks so 10^5-lane sweeps never
+    materialize one giant padded matrix; every chunk is padded to a
+    power-of-two lane bucket and ONE global power-of-two event count
+    (computed over *all* lanes), so all full chunks — and the same-shaped
+    chunks of the next sweep — hit the same compiled program. Padding lanes
+    are absorbing (+inf ready, 0 exec, +inf t_tr, clock 0). Returns each
+    lane's trimmed completion vector plus the per-lane fill sums."""
+    run = _pallas_engine() if backend == "pallas" else _jax_engine()
+    n = len(readies)
+    k_pad = _pow2(max((r.size for r in readies), default=0))
+    comps: list[np.ndarray] = []
+    trained = np.empty(n)
+    for s in range(0, n, _LANE_CHUNK):
+        e = min(n, s + _LANE_CHUNK)
+        m = e - s
+        lanes_pad = min(_LANE_CHUNK, _pow2(m))
+        ready, exec_t = _pad_lanes(readies[s:e], execs[s:e],
+                                   lanes_pad=lanes_pad, k_pad=k_pad)
+        ttr = np.full(lanes_pad, np.inf)
+        ttr[:m] = t_trs[s:e]
+        cap = np.full(lanes_pad, np.inf)
+        cap[:m] = tau_caps[s:e]
+        clk = np.zeros(lanes_pad)
+        clk[:m] = clocks[s:e]
+        c, f = run(ready, exec_t, ttr, cap, clk)
+        comps.extend(c[i, :readies[s + i].size] for i in range(m))
+        trained[s:e] = f[:m]
+    return comps, trained
 
 
 def _tau_array(tau_caps: Sequence[Optional[int]]) -> np.ndarray:
@@ -738,10 +911,11 @@ def simulate_multi_tenant(device: DeviceModel,
     n = len(stream_workloads)
     if not (len(bss) == len(traces) == n):
         raise ValueError("stream workloads / batch sizes / traces must align")
-    if resolve_backend(backend) == "jax":
+    backend = resolve_backend(backend)
+    if backend != "numpy":
         return simulate_multi_tenant_batch(
             device, w_tr, [stream_workloads], [pm], [bss], [traces],
-            tau_caps=[tau_cap], carry_ins=[carry_in], backend="jax")[0]
+            tau_caps=[tau_cap], carry_ins=[carry_in], backend=backend)[0]
     tps = [_time_power(device, w, pm, int(b))
            for w, b in zip(stream_workloads, bss)]
     t_ins = [t for t, _ in tps]
@@ -824,15 +998,15 @@ def simulate_multi_tenant_batch(
         eff, clock = _carry_stream_traces(traces, ci)
         ready, exec_t, sid = _merge_events(eff, bss, [t for t, _ in tps])
         lanes.append((tps, ttr, ready, exec_t, sid, eff, clock))
-    ready, exec_t = _pad_lanes([ln[2] for ln in lanes],
-                               [ln[3] for ln in lanes])
-    c, trained_f = _jax_engine()(ready, exec_t,
-                                 np.array([ln[1][0] for ln in lanes]),
-                                 _tau_array(caps),
-                                 np.array([ln[6] for ln in lanes]))
+    comps, trained_f = _run_engine(backend,
+                                   [ln[2] for ln in lanes],
+                                   [ln[3] for ln in lanes],
+                                   np.array([ln[1][0] for ln in lanes]),
+                                   _tau_array(caps),
+                                   np.array([ln[6] for ln in lanes]))
     out, flat = [], []
     for i, (tps, ttr, ready_i, _, sid, eff, clock) in enumerate(lanes):
-        comp = c[i, :ready_i.size]
+        comp = comps[i]
         trained = int(round(float(trained_f[i]))) if w_tr else 0
         power = ttr[1] if trained else 0.0
         for _, p_in in tps:
@@ -850,7 +1024,7 @@ def simulate_multi_tenant_batch(
         out.append(MultiTenantReport(streams, trained, duration, power,
                                      ArrivalTrace.merge(eff),
                                      queue_state=state))
-    _presort_reports(flat)
+    _presort_reports(flat, backend=backend)
     return out
 
 
@@ -876,10 +1050,10 @@ def simulate(device: DeviceModel, w_tr: Optional[WorkloadProfile],
         raise ValueError("carry-in backlog is only defined for the "
                          "deterministic managed approach")
     backend = resolve_backend(backend)
-    if backend == "jax" and approach == "managed":
+    if backend != "numpy" and approach == "managed":
         return simulate_batch(device, w_tr, w_in, [pm], [bs], [trace],
                               tau_caps=[tau_cap], carry_ins=[carry_in],
-                              backend="jax")[0]
+                              backend=backend)[0]
     if approach == "managed":
         return engine(device, w_tr, w_in, pm, bs, trace, seed, tau_cap,
                       carry_in)
@@ -938,14 +1112,13 @@ def simulate_batch(device: DeviceModel, w_tr: Optional[WorkloadProfile],
                for (times, _), bs in zip(lane_times, bss)]
     execs = [np.broadcast_to(np.float64(t), r.shape)
              for (t, _), r in zip(tps, readies)]
-    ready, exec_t = _pad_lanes(readies, execs)
-    c, trained_f = _jax_engine()(ready, exec_t,
-                                 np.array([t for t, _ in ttr]),
-                                 _tau_array(caps),
-                                 np.array([cl for _, cl in lane_times]))
+    comps, trained_f = _run_engine(backend, readies, execs,
+                                   np.array([t for t, _ in ttr]),
+                                   _tau_array(caps),
+                                   np.array([cl for _, cl in lane_times]))
     reports = []
     for i, (tr, bs) in enumerate(zip(traces, bss)):
-        comp = c[i, :readies[i].size]
+        comp = comps[i]
         times, clock = lane_times[i]
         trained = int(round(float(trained_f[i]))) if w_tr else 0
         power = max(tps[i][1], ttr[i][1] if trained else 0.0)
@@ -954,7 +1127,7 @@ def simulate_batch(device: DeviceModel, w_tr: Optional[WorkloadProfile],
         reports.append(ExecutionReport(
             "managed", _latencies(comp, times, int(bs)), trained,
             tr.duration, power, tr, queue_state=state))
-    _presort_reports(reports)
+    _presort_reports(reports, backend=backend)
     return reports
 
 

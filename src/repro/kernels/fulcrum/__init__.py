@@ -1,0 +1,21 @@
+"""Hand-written Pallas kernels for the Fulcrum execution engine.
+
+Two hot paths of ``core.simulate`` get a kernel each, following the in-tree
+``kernels/ssd_scan`` pattern (kernel module + pure-jnp ``ref.py`` oracle,
+``interpret=True`` so CPU CI runs the exact kernel code path):
+
+ * ``maxplus_scan`` — the managed-interleaving recurrence
+   ``c_k = max(c_{k-1}, ready_k) + e_k`` as a lane-blocked Hillis-Steele
+   doubling scan over max-plus affine maps, fused with the training
+   slack-fill count.
+ * ``lane_sort`` — the per-lane padded quantile sort behind the batched
+   report builder (``simulate._presort_reports``), a bitonic network over
+   +inf-padded lanes, with per-lane budget-violation counts.
+
+Backend selection (pallas → jax → numpy) lives in ``core.backend``;
+tolerance contracts in ``docs/exactness.md``.
+"""
+from repro.kernels.fulcrum.lane_sort import lane_sort
+from repro.kernels.fulcrum.maxplus_scan import maxplus_scan
+
+__all__ = ["maxplus_scan", "lane_sort"]

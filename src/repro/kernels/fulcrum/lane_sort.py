@@ -1,0 +1,93 @@
+"""Pallas kernel for the per-lane padded quantile sort (report builder).
+
+The batched report builder (``simulate._presort_reports``) fills every
+lane's quantile/violation cache from one ascending sort of a +inf-padded
+(lane, request) latency matrix. This kernel runs that sort as a bitonic
+network, one grid cell per lane block, entirely in VMEM: compare-exchange
+partners at distance ``j`` are materialized by the reshape-flip trick
+(``(bl, R/2j, 2, j)`` with the size-2 axis swapped — no gather), and the
+stage direction/role masks come from ``broadcasted_iota`` bit tests. The
+per-lane count of finite entries above a per-lane latency budget (the
+violation-rate numerator) is fused into the same pass.
+
+Sorting permutes values without arithmetic, so the sorted output is the
+same float64 multiset whatever sorts it — NumPy's sort stays the bitwise
+reference and this kernel is checked for *equality*, not tolerance
+(latencies are strictly positive; no -0.0/+0.0 tie ambiguity).
+
+R is padded to a power of two with +inf by the wrapper (the network needs
+it); real latencies stay the leading prefix. ``interpret=True`` (default
+off-TPU) runs the identical body on CPU for CI.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _lane_sort_kernel(x_ref, bud_ref, o_ref, v_ref):
+    x = x_ref[...]                                      # (bl, R), R pow2
+    bl, R = x.shape
+    idx = jax.lax.broadcasted_iota(jnp.int32, (bl, R), 1)
+    k = 2
+    while k <= R:                                       # bitonic network
+        up = (idx & k) == 0                             # stage direction
+        j = k // 2
+        while j >= 1:
+            y = x.reshape(bl, R // (2 * j), 2, j)
+            part = jnp.concatenate([y[:, :, 1:2], y[:, :, 0:1]],
+                                   axis=2).reshape(bl, R)
+            lo = (idx & j) == 0                         # lower of the pair
+            mn = jnp.minimum(x, part)
+            mx = jnp.maximum(x, part)
+            x = jnp.where(lo == up, mn, mx)
+            j //= 2
+        k *= 2
+    o_ref[...] = x
+    over = jnp.isfinite(x) & (x > bud_ref[...])
+    v_ref[...] = over.sum(axis=1, keepdims=True).astype(jnp.int32)
+
+
+def lane_sort(mat: jax.Array, budgets: jax.Array | None = None,
+              block_lanes: int | None = None,
+              interpret: bool | None = None):
+    """Ascending per-lane sort of a +inf-padded (lanes, R) matrix.
+
+    Returns the sorted matrix, or ``(sorted, violations)`` when per-lane
+    latency ``budgets`` (lanes,) are given — ``violations[i]`` counts finite
+    entries of lane ``i`` strictly above ``budgets[i]``. Contract of
+    ``ref.lane_sort_ref`` / ``ref.lane_violations_ref``.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    L, R = mat.shape
+    want_viol = budgets is not None
+    if L == 0 or R == 0:
+        out = jnp.zeros((L, R), mat.dtype)
+        return (out, jnp.zeros((L,), jnp.int32)) if want_viol else out
+    if budgets is None:
+        budgets = jnp.zeros((L,), mat.dtype)
+    r_pad = (-R) % max(1, 1 << (R - 1).bit_length())    # next pow2
+    if r_pad:
+        mat = jnp.pad(mat, ((0, 0), (0, r_pad)), constant_values=jnp.inf)
+    bl = block_lanes if block_lanes is not None else (256 if interpret else 8)
+    bl = min(bl, L)
+    l_pad = (-L) % bl
+    if l_pad:
+        mat = jnp.pad(mat, ((0, l_pad), (0, 0)), constant_values=jnp.inf)
+        budgets = jnp.pad(budgets, (0, l_pad))
+    Lp, Rp = mat.shape
+    lane_spec = pl.BlockSpec((bl, Rp), lambda i: (i, 0))
+    col_spec = pl.BlockSpec((bl, 1), lambda i: (i, 0))
+    srt, viol = pl.pallas_call(
+        _lane_sort_kernel,
+        grid=(Lp // bl,),
+        in_specs=[lane_spec, col_spec],
+        out_specs=[lane_spec, col_spec],
+        out_shape=[jax.ShapeDtypeStruct((Lp, Rp), mat.dtype),
+                   jax.ShapeDtypeStruct((Lp, 1), jnp.int32)],
+        interpret=interpret,
+    )(mat, budgets.astype(mat.dtype).reshape(-1, 1))
+    srt = srt[:L, :R]
+    return (srt, viol[:L, 0]) if want_viol else srt

@@ -1,0 +1,96 @@
+"""Pallas kernel for the managed-interleaving max-plus scan (engine hot path).
+
+One grid cell owns a block of lanes and runs the whole event axis in
+registers/VMEM: a Hillis-Steele doubling scan over the max-plus affine maps
+``f_k(x) = max(x + a_k, b_k)`` (``a = exec``, ``b = ready + exec``), whose
+composition rule is ``(a, b) <- (a_shift + a, max(b_shift + a, b))`` — after
+``log2 K`` rounds ``(a, b)`` holds every prefix composition, so the batch
+completions are ``c = max(clock + a, b)`` applied to the carried window
+clock. The training slack-fill count (floor estimate, the jax tier's
+documented tolerance contract — no scalar boundary replay on-accelerator)
+is fused into the same cell, one memory pass over the block.
+
+Padding convention (``simulate._pad_lanes``): trailing events carry
+``ready = +inf, exec = 0`` — absorbing for max and + — and whole padding
+lanes are all-padding with ``clock = 0``; fills mask padded events via
+``isfinite(ready)``.
+
+Runs under ``enable_x64`` (float64 lanes, the engine's working precision).
+``interpret=True`` (the default off-TPU) executes the identical kernel body
+on CPU, so CI exercises this exact code path — see ``tests/test_kernels.py``
+and the in-tree ``kernels/ssd_scan`` exemplar this module follows.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _maxplus_kernel(ready_ref, exec_ref, ttr_ref, cap_ref, clk_ref,
+                    c_ref, fills_ref):
+    r = ready_ref[...]                                  # (bl, K)
+    a = exec_ref[...]                                   # (bl, K)
+    ttr = ttr_ref[...]                                  # (bl, 1)
+    cap = cap_ref[...]
+    clk = clk_ref[...]
+    bl, K = r.shape
+    b = r + a
+    d = 1
+    while d < K:                                        # Hillis-Steele: the
+        b_s = jnp.concatenate(                          # shifted-in prefix
+            [jnp.full((bl, d), -jnp.inf, b.dtype), b[:, :-d]], axis=1)
+        a_s = jnp.concatenate(
+            [jnp.zeros((bl, d), a.dtype), a[:, :-d]], axis=1)
+        b = jnp.maximum(b_s + a, b)                     # b first: uses the
+        a = a_s + a                                     # round's current a
+        d *= 2
+    c = jnp.maximum(clk + a, b)
+    start = jnp.concatenate([clk, c[:, :-1]], axis=1)
+    fills = jnp.clip(jnp.floor((r - start) / ttr), 0.0, cap)
+    fills = jnp.where(jnp.isfinite(r), fills, 0.0)
+    c_ref[...] = c
+    fills_ref[...] = fills.sum(axis=1, keepdims=True)
+
+
+def maxplus_scan(ready: jax.Array, exec_t: jax.Array, t_tr: jax.Array,
+                 tau_cap: jax.Array, clock: jax.Array,
+                 block_lanes: int | None = None,
+                 interpret: bool | None = None):
+    """Managed completions + slack-fill sums, lane-blocked.
+
+    ready, exec_t: (lanes, K) padded event matrices; t_tr, tau_cap, clock:
+    (lanes,) per-lane scalars (+inf t_tr/tau_cap = no training / no cap).
+    Returns (completions (lanes, K), fills_sum (lanes,)) — the contract of
+    ``ref.maxplus_scan_ref``.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    L, K = ready.shape
+    if L == 0 or K == 0:
+        return (jnp.zeros((L, K), ready.dtype),
+                jnp.zeros((L,), ready.dtype))
+    # interpret mode pays Python per grid cell: big blocks. TPU: sublane tile.
+    bl = block_lanes if block_lanes is not None else (256 if interpret else 8)
+    bl = min(bl, L)
+    pad = (-L) % bl
+    if pad:                     # absorbing padding lanes (all-+inf events)
+        ready = jnp.pad(ready, ((0, pad), (0, 0)), constant_values=jnp.inf)
+        exec_t = jnp.pad(exec_t, ((0, pad), (0, 0)))
+        t_tr = jnp.pad(t_tr, (0, pad), constant_values=jnp.inf)
+        tau_cap = jnp.pad(tau_cap, (0, pad))
+        clock = jnp.pad(clock, (0, pad))
+    Lp = L + pad
+    lane_spec = pl.BlockSpec((bl, K), lambda i: (i, 0))
+    col_spec = pl.BlockSpec((bl, 1), lambda i: (i, 0))
+    c, fills = pl.pallas_call(
+        _maxplus_kernel,
+        grid=(Lp // bl,),
+        in_specs=[lane_spec, lane_spec, col_spec, col_spec, col_spec],
+        out_specs=[lane_spec, col_spec],
+        out_shape=[jax.ShapeDtypeStruct((Lp, K), ready.dtype),
+                   jax.ShapeDtypeStruct((Lp, 1), ready.dtype)],
+        interpret=interpret,
+    )(ready, exec_t, t_tr.reshape(-1, 1), tau_cap.reshape(-1, 1),
+      clock.reshape(-1, 1))
+    return c[:L], fills[:L, 0]

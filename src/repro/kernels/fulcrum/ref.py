@@ -1,0 +1,58 @@
+"""Pure-jnp oracles for the Fulcrum engine kernels.
+
+``maxplus_scan_ref`` is the ``jax.lax.associative_scan`` formulation the
+engine shipped in PR 4 (``core.simulate._jax_engine``), restated here as the
+kernel contract: the managed recurrence ``c_k = max(c_{k-1}, ready_k) + e_k``
+is the composition of affine max-plus maps ``f_k(x) = max(x + a_k, b_k)``
+with ``a_k = e_k``, ``b_k = ready_k + e_k``; composition keeps that form via
+``(f_r . f_l) -> (a_l + a_r, max(b_l + a_r, b_r))``, and applying the prefix
+compositions to ``c_0 = clock`` gives ``c_k = max(clock + A_k, B_k)``.
+
+Padding convention (shared with the kernels and ``simulate._pad_lanes``):
+trailing events carry ``ready = +inf, exec = 0`` — absorbing for both ops —
+and idle/padding lanes are all-padding. Fill counts mask padded events via
+``isfinite(ready)``; ``t_tr = +inf`` (no training) yields zero fills.
+
+``lane_sort_ref`` / ``lane_violations_ref`` mirror the report-builder sort:
+ascending per-lane sort of a +inf-padded (lane, request) matrix (real
+latencies stay the leading prefix) and the per-lane count of *finite*
+entries strictly above a per-lane latency budget.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def maxplus_scan_ref(ready: jax.Array, exec_t: jax.Array, t_tr: jax.Array,
+                     tau_cap: jax.Array, clock: jax.Array):
+    """Managed completions + slack-fill sums via lax.associative_scan.
+
+    ready, exec_t: (lanes, K); t_tr, tau_cap, clock: (lanes,).
+    Returns (completions (lanes, K), fills_sum (lanes,)).
+    """
+    def combine(left, right):
+        a_l, b_l = left
+        a_r, b_r = right
+        return a_l + a_r, jnp.maximum(b_l + a_r, b_r)
+
+    def one_lane(r, e, ttr, cap, clk):
+        a, b = jax.lax.associative_scan(combine, (e, r + e))
+        c = jnp.maximum(clk + a, b)
+        start = jnp.concatenate([jnp.full(1, clk, c.dtype), c[:-1]])
+        fills = jnp.clip(jnp.floor((r - start) / ttr), 0.0, cap)
+        fills = jnp.where(jnp.isfinite(r), fills, 0.0)
+        return c, fills.sum()
+
+    return jax.vmap(one_lane)(ready, exec_t, t_tr, tau_cap, clock)
+
+
+def lane_sort_ref(mat: jax.Array) -> jax.Array:
+    """Ascending per-lane sort of a +inf-padded (lanes, R) matrix."""
+    return jnp.sort(mat, axis=-1)
+
+
+def lane_violations_ref(mat: jax.Array, budgets: jax.Array) -> jax.Array:
+    """Per-lane count of finite entries strictly above the lane's budget."""
+    over = jnp.isfinite(mat) & (mat > budgets[:, None])
+    return over.sum(axis=-1).astype(jnp.int32)

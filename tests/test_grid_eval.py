@@ -269,3 +269,24 @@ def test_pareto_matches_reference_randomized(lower):
                 _ref_front_lookup(front, budget, lower)
     assert pareto_front({}) == {}
     assert front_lookup({}, 10.0) is None
+
+
+# ---------------------------------------------------------------------------
+# jit-cache stability: ragged final problem chunks are padded to pow2 row
+# buckets, so same-bucket batch sizes must not retrace the solver kernels
+# ---------------------------------------------------------------------------
+
+def test_solver_trace_count_stable_within_pow2_bucket():
+    pytest.importorskip("jax")
+    w = TRAIN_WORKLOADS["mobilenet"]
+    grid = G.materialize(DEV, w, SPACE)
+    probs = [P.TrainProblem(float(b)) for b in np.linspace(5.0, 30.0, 30)]
+    G.solve_train_batch(probs[:29], grid, backend="jax")   # pads 29 -> 32
+    n0 = G.solver_trace_count()
+    G.solve_train_batch(probs[:30], grid, backend="jax")   # 30 -> 32: reuse
+    G.solve_train_batch(probs[:17], grid, backend="jax")   # 17 -> 32: reuse
+    assert G.solver_trace_count() == n0
+    # padding duplicates the last problem; answers must be unaffected
+    a = G.solve_train_batch(probs, grid, backend="numpy")
+    b = G.solve_train_batch(probs, grid, backend="jax")
+    assert a == b

@@ -400,3 +400,161 @@ def test_batched_report_builder_matches_per_report_statistics():
             want = (float(np.count_nonzero(xs > budget)) / xs.size
                     if xs.size else 0.0)
             assert rep.violation_rate(budget) == want
+
+
+# ---------------------------------------------------------------------------
+# pallas backend tier: the hand-written kernels behind the same entry points
+# ---------------------------------------------------------------------------
+
+needs_pallas = pytest.mark.skipif(not B.pallas_available(),
+                                  reason="pallas unavailable")
+
+
+@needs_pallas
+@pytest.mark.parametrize("seed", range(2))
+def test_pallas_engine_matches_numpy_randomized(seed):
+    rng = np.random.default_rng(300 + seed)
+    w_tr = TRAIN_WS[seed % len(TRAIN_WS)] if seed % 2 == 0 else None
+    w_in = INFER_WS[seed % len(INFER_WS)]
+    pms, bss, traces, caps = [], [], [], []
+    for _ in range(6):
+        _, _, pm, bs, trace, cap = _random_config(rng)
+        pms.append(pm), bss.append(bs), traces.append(trace), caps.append(cap)
+    ref = S.simulate_batch(DEV, w_tr, w_in, pms, bss, traces,
+                           tau_caps=caps, backend="numpy")
+    got = S.simulate_batch(DEV, w_tr, w_in, pms, bss, traces,
+                           tau_caps=caps, backend="pallas")
+    for a, b in zip(ref, got):
+        _assert_engine_close(a, b)
+        # the pallas report builder sorts with the bitonic kernel: sorting
+        # permutes values, so the cache must EQUAL sorting its own latencies
+        assert b._sorted is not None
+        np.testing.assert_array_equal(
+            b._sorted, np.sort(np.asarray(b.latencies, np.float64)))
+
+
+@needs_pallas
+def test_pallas_single_simulate_matches_numpy():
+    w_tr = TRAIN_WORKLOADS["mobilenet"]
+    w_in = INFER_WORKLOADS["mobilenet"]
+    trace = S.ArrivalTrace.poisson(60.0, 20.0, seed=7)
+    ref = S.simulate(DEV, w_tr, w_in, SPACE.maxn(), 16, trace, "managed")
+    got = S.simulate(DEV, w_tr, w_in, SPACE.maxn(), 16, trace, "managed",
+                     backend="pallas")
+    _assert_engine_close(ref, got)
+
+
+@needs_pallas
+def test_pallas_multi_tenant_matches_numpy():
+    ws = [INFER_WORKLOADS["mobilenet"], INFER_WORKLOADS["lstm"]]
+    traces = [S.ArrivalTrace.poisson(30.0, 15.0, seed=1),
+              S.ArrivalTrace.uniform(50.0, 15.0)]
+    ref = S.simulate_multi_tenant(DEV, TRAIN_WORKLOADS["resnet18"], ws,
+                                  SPACE.maxn(), [4, 16], traces)
+    got = S.simulate_multi_tenant(DEV, TRAIN_WORKLOADS["resnet18"], ws,
+                                  SPACE.maxn(), [4, 16], traces,
+                                  backend="pallas")
+    assert abs(ref.train_minibatches - got.train_minibatches) <= 2
+    for ra, rb in zip(ref.streams, got.streams):
+        np.testing.assert_allclose(np.asarray(rb.latencies, np.float64),
+                                   np.asarray(ra.latencies, np.float64),
+                                   **TOL)
+
+
+def test_env_pallas_degrades_down_tiers(monkeypatch):
+    """An environment-level 'pallas' request degrades pallas -> jax -> numpy
+    as capabilities vanish; an *explicit* backend='pallas' argument raises."""
+    monkeypatch.setenv(B.ENGINE_BACKEND_ENV, "pallas")
+    if B.pallas_available():
+        assert B.resolve_backend(None) == "pallas"
+    monkeypatch.setattr(B, "_PALLAS_OK", False)
+    if B.jax_available():
+        assert B.resolve_backend(None) == "jax"
+    monkeypatch.setattr(B, "_JAX_OK", False)
+    assert B.resolve_backend(None) == "numpy"
+    with pytest.raises(RuntimeError, match="pallas"):
+        B.resolve_backend("pallas")
+
+
+def test_grid_solvers_reject_pallas_backend():
+    """The 'pallas' tier is engine-only: the grid solvers must refuse it
+    loudly instead of silently falling back to the NumPy branch."""
+    from repro.core import grid_eval as G
+    with pytest.raises(ValueError, match="unknown backend"):
+        G.solve_train_batch([], {}, backend="pallas")
+    with pytest.raises(ValueError, match="unknown backend"):
+        G.solve_infer_batch([], {}, backend="pallas")
+    with pytest.raises(ValueError, match="unknown backend"):
+        G.solve_concurrent_batch([], {}, {}, backend="pallas")
+
+
+# ---------------------------------------------------------------------------
+# jit-cache stability: shape bucketing must keep retraces flat across calls
+# ---------------------------------------------------------------------------
+
+@needs_jax
+def test_engine_trace_count_stable_within_shape_bucket():
+    """Lane counts inside one power-of-two bucket (and identical padded
+    event counts) must reuse the compiled scan — no per-call retracing."""
+    w_in = INFER_WORKLOADS["mobilenet"]
+    trace = S.ArrivalTrace.poisson(30.0, 4.0, seed=3)
+
+    def batch(n):
+        S.simulate_batch(DEV, None, w_in, [SPACE.maxn()] * n, [8] * n,
+                         [trace] * n, backend="jax")
+
+    batch(5)                           # compile (or reuse a prior test's)
+    n0 = S.engine_trace_count()
+    batch(5)                           # identical shapes
+    batch(6)                           # same pow2 lane bucket (8)
+    batch(3)                           # floor bucket is 8 as well
+    assert S.engine_trace_count() == n0
+
+
+@needs_pallas
+def test_pallas_trace_count_stable_within_shape_bucket():
+    w_in = INFER_WORKLOADS["lstm"]
+    trace = S.ArrivalTrace.poisson(25.0, 4.0, seed=5)
+
+    def batch(n):
+        S.simulate_batch(DEV, None, w_in, [SPACE.maxn()] * n, [4] * n,
+                         [trace] * n, backend="pallas")
+
+    batch(4)
+    n0 = S.engine_trace_count()
+    batch(4)
+    batch(7)
+    assert S.engine_trace_count() == n0
+
+
+# ---------------------------------------------------------------------------
+# chunked report builder: chunking must be invisible (bitwise)
+# ---------------------------------------------------------------------------
+
+def test_presort_chunking_bitwise_identical(monkeypatch):
+    """Force tiny sort chunks: the per-report sorted caches must be bitwise
+    identical to one unchunked NumPy sort per report."""
+    rng = np.random.default_rng(9)
+    reports = []
+    for _ in range(13):
+        xs = rng.uniform(0.0, 3.0, int(rng.integers(0, 40))).tolist()
+        reports.append(S.ExecutionReport("managed", xs, 0, 1.0, 0.0))
+    want = [np.sort(np.asarray(r.latencies, np.float64)) for r in reports]
+    monkeypatch.setattr(S, "_SORT_CHUNK_ELEMS", 64)
+    S._presort_reports(reports)
+    for rep, w in zip(reports, want):
+        assert rep._sorted is not None
+        np.testing.assert_array_equal(rep._sorted, w)
+
+
+@needs_pallas
+def test_presort_pallas_backend_equals_numpy_sort(monkeypatch):
+    rng = np.random.default_rng(11)
+    reports = [S.ExecutionReport(
+        "managed", rng.uniform(0.0, 3.0, int(rng.integers(1, 30))).tolist(),
+        0, 1.0, 0.0) for _ in range(9)]
+    want = [np.sort(np.asarray(r.latencies, np.float64)) for r in reports]
+    monkeypatch.setattr(S, "_SORT_CHUNK_ELEMS", 128)   # exercise chunk loop
+    S._presort_reports(reports, backend="pallas")
+    for rep, w in zip(reports, want):
+        np.testing.assert_array_equal(rep._sorted, w)
