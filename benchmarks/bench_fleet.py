@@ -1,0 +1,187 @@
+"""Fleet tier (``Scenario.FLEET``): K heterogeneous devices stepped as ONE
+batched program per window vs the same fleet served as K sequential
+single-device closed loops.
+
+For each fleet size K the same aggregate trace is dispatched, planned and
+executed twice — ``fleet.serve_fleet`` (one batched grid solve per ladder
+rung, one ``simulate_batch`` with per-lane devices per window) and
+``fleet.serve_fleet_sequential`` (the existing scalar loop per device) —
+and the wall clock, device-window planning throughput (configs/s), batched
+speedup, and the parity between the two are snapshotted to
+``benchmarks/results/BENCH_fleet.json``. Parity is the PR's contract: the
+NumPy rows must agree *bitwise* (max |diff| exactly 0.0) and the jax rows
+within engine tolerance; ``--check`` gates batched >= sequential configs/s
+at K=64 and the parity bounds on every recorded backend."""
+from __future__ import annotations
+
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.core import fleet as F
+from repro.core.backend import jax_available
+from repro.core.controller import ControllerConfig
+from repro.core.device_model import INFER_WORKLOADS
+
+from benchmarks.common import row, snapshot
+
+POWER, LATENCY = 30.0, 0.1
+WINDOW_S = 5.0
+RATE_PER_DEVICE = 30.0        # aggregate rate scales with the fleet
+SNAPSHOT = Path(__file__).parent / "results" / "BENCH_fleet.json"
+JAX_TOL = 1e-6                # engine parity bound (atol 1e-8 per lane,
+                              # loose headroom for reduction ordering)
+
+CFG = ControllerConfig(rate_estimator="ewma", rate_margin=1.5,
+                       feedback=True, carry_backlog=True,
+                       mode_switch_s=0.25)
+
+
+def _windows(full: bool) -> list[float]:
+    # per-device offered rates around the planner's sweet spot with one
+    # overload window (backlog carryover + feedback get exercised)
+    base = [0.9, 1.4, 0.7, 1.1] if full else [0.9, 1.4]
+    return [RATE_PER_DEVICE * m for m in base]
+
+
+def _serve(fn, K: int, rates, backend: str):
+    spec = F.FleetSpec(K, seed=3, dispatch="least-backlog")
+    t0 = time.perf_counter()
+    wins = fn(INFER_WORKLOADS["mobilenet"], POWER, LATENCY,
+              [r * K for r in rates], spec, window_duration=WINDOW_S,
+              arrivals="poisson", seed=11, backend=backend,
+              controller=CFG)
+    return wins, time.perf_counter() - t0
+
+
+def parity_diff(a, b) -> float:
+    """Max |diff| across every per-device executed latency array, plus the
+    plan/shape fields that must agree exactly; ``inf`` on any structural
+    mismatch (a device solved in one run but not the other, different plan,
+    different dispatch)."""
+    worst = 0.0
+    for wa, wb in zip(a, b):
+        if not np.array_equal(wa.dispatch_counts, wb.dispatch_counts):
+            return float("inf")
+        for da, db in zip(wa.devices, wb.devices):
+            if (da.solution is None) != (db.solution is None):
+                return float("inf")
+            if da.solution is None:
+                continue
+            if (da.solution.pm, da.solution.bs) \
+                    != (db.solution.pm, db.solution.bs):
+                return float("inf")
+            la = np.asarray(da.report.latencies, np.float64)
+            lb = np.asarray(db.report.latencies, np.float64)
+            if la.shape != lb.shape:
+                return float("inf")
+            if la.size:
+                worst = max(worst, float(np.max(np.abs(la - lb))))
+    return worst
+
+
+def run(full: bool = False, quick: bool = False,
+        do_check: bool = False) -> list[str]:
+    ks = [8, 64, 512] if full else [8, 64]
+    rates = _windows(full)
+    path = SNAPSHOT if full \
+        else SNAPSHOT.with_name("BENCH_fleet_partial.json")
+    rows, records = [], {}
+    configs_total = 0
+    # warm the memoized grids/caches outside the timed region so the first
+    # K doesn't absorb one-time materialization cost
+    _serve(F.serve_fleet, 2, rates[:1], "numpy")
+    _serve(F.serve_fleet_sequential, 2, rates[:1], "numpy")
+    for K in ks:
+        configs = K * len(rates)           # device-window planning decisions
+        configs_total += configs
+        batched, t_b = _serve(F.serve_fleet, K, rates, "numpy")
+        seq, t_s = _serve(F.serve_fleet_sequential, K, rates, "numpy")
+        diff = parity_diff(batched, seq)
+        rec = {
+            "batched_s": t_b, "sequential_s": t_s,
+            "speedup": t_s / t_b,
+            "configs": configs,
+            "configs_per_s_batched": configs / t_b,
+            "configs_per_s_sequential": configs / t_s,
+            "parity_max_abs_diff": diff,
+            "goodput_frac": float(np.mean([w.goodput for w in batched])),
+            "offered_requests": int(sum(w.offered_requests
+                                        for w in batched)),
+            "attributed_power_w": float(np.mean(
+                [w.attributed_power for w in batched])),
+        }
+        records[f"fleet/numpy/k{K}"] = rec
+        rows.append(row(
+            f"fleet/numpy/k{K}/speedup", rec["speedup"],
+            f"batched={t_b:.3f}s;sequential={t_s:.3f}s;"
+            f"parity={diff:g};goodput={rec['goodput_frac']:.3f}"))
+        if jax_available():
+            batched_j, t_j = _serve(F.serve_fleet, K, rates, "jax")
+            jdiff = parity_diff(batched_j, seq)
+            records[f"fleet/jax/k{K}"] = {
+                "batched_s": t_j, "configs": configs,
+                "configs_per_s_batched": configs / t_j,
+                "parity_max_abs_diff": jdiff,
+            }
+            rows.append(row(
+                f"fleet/jax/k{K}/parity_max_abs_diff", jdiff,
+                f"batched={t_j:.3f}s;vs=sequential-numpy"))
+    snapshot(path, records, configs=configs_total)
+    if do_check:
+        fails = check(records)
+        for fl in fails:
+            print(f"CHECK FAIL: {fl}")
+        if fails:
+            raise SystemExit(1)
+        print("check passed: batched >= sequential configs/s at K=64, "
+              "numpy parity bitwise, jax parity within tolerance")
+    return rows
+
+
+def check(records: dict) -> list[str]:
+    """CI acceptance gates (issue 8): the batched fleet step must beat the
+    sequential loop on planning throughput at K=64, the NumPy parity must
+    be *bitwise* (max |diff| exactly 0.0 — the correctness contract), and
+    every recorded jax row must sit within engine tolerance of the
+    sequential NumPy reference. Returns failure strings (empty == pass)."""
+    fails = []
+    k64 = records.get("fleet/numpy/k64")
+    if k64 is None:
+        fails.append("missing fleet/numpy/k64")
+    elif k64["configs_per_s_batched"] < k64["configs_per_s_sequential"]:
+        fails.append(
+            f"fleet/numpy/k64: batched {k64['configs_per_s_batched']:.1f} "
+            f"configs/s < sequential "
+            f"{k64['configs_per_s_sequential']:.1f} configs/s")
+    for key, rec in records.items():
+        if not key.startswith("fleet/"):
+            continue
+        diff = rec.get("parity_max_abs_diff")
+        if diff is None:
+            fails.append(f"{key}: parity not recorded")
+        elif key.startswith("fleet/numpy/") and diff != 0.0:
+            fails.append(f"{key}: numpy parity must be bitwise, "
+                         f"max_abs_diff={diff!r}")
+        elif key.startswith("fleet/jax/") and not diff <= JAX_TOL:
+            fails.append(f"{key}: jax parity {diff!r} > {JAX_TOL}")
+    return fails
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="K in {8, 64, 512}, 4 rate windows (snapshots "
+                         "BENCH_fleet.json)")
+    ap.add_argument("--quick", action="store_true",
+                    help="K in {8, 64}, 2 rate windows (CI-sized; side "
+                         "snapshot)")
+    ap.add_argument("--check", action="store_true",
+                    help="assert the fleet acceptance gates (batched >= "
+                         "sequential at K=64, bitwise numpy parity, jax "
+                         "parity within tolerance)")
+    args = ap.parse_args()
+    for r in run(full=args.full, quick=args.quick, do_check=args.check):
+        print(r)

@@ -556,3 +556,54 @@ class ControllerState:
             pol.update(rep.violation_rate(bud),
                        rep.latency_quantile(self.cfg.tail_quantile), bud)
         self.carry = queue_state
+
+
+class FleetControllerState:
+    """Array-of-struct controller state for a K-device fleet
+    (``Scenario.FLEET``): device ``d`` is governed by exactly the scalar
+    ``ControllerState(cfg, 1)`` a standalone single-device closed loop
+    would hold, so parity with K sequential loops is by construction —
+    same estimator floats, same feedback scales, same carried queue
+    states. The ``plan_*`` methods return per-device arrays the batched
+    fleet planner consumes; this O(K) Python bookkeeping is negligible
+    against the batched solve + batched simulate it feeds (measured in
+    ``benchmarks/bench_fleet.py``)."""
+
+    def __init__(self, cfg: ControllerConfig, n_devices: int):
+        if n_devices <= 0:
+            raise ValueError("a fleet needs at least one device")
+        self.cfg = cfg
+        self.devices = [ControllerState(cfg, 1) for _ in range(n_devices)]
+
+    def __len__(self) -> int:
+        return len(self.devices)
+
+    def plan_rates(self, announced: Sequence[float], t0: float = 0.0,
+                   duration: Optional[float] = None,
+                   margin: Optional[float] = None,
+                   pressure: bool = True) -> np.ndarray:
+        """Per-device planning rates (one announced rate per device)."""
+        return np.array([st.plan_rates([r], t0, duration, margin=margin,
+                                       pressure=pressure)[0]
+                         for st, r in zip(self.devices, announced)])
+
+    def plan_budgets(self, nominal: Sequence[float]) -> np.ndarray:
+        """Per-device effective latency budgets."""
+        return np.array([st.plan_budgets([b])[0]
+                         for st, b in zip(self.devices, nominal)])
+
+    def mode_switch(self, d: int, pm) -> float:
+        """Commit device ``d`` to a power mode (solved devices only — an
+        unsolved device keeps its previous mode, as in the scalar loop)."""
+        return self.devices[d].mode_switch(pm)
+
+    def window_carry_in(self, d: int, t0: float, switch_s: float) -> QueueState:
+        return self.devices[d].window_carry_in(t0, switch_s)
+
+    def observe(self, d: int, trace, report, nominal_budget: float,
+                duration: float, queue_state: Optional[QueueState]) -> None:
+        self.devices[d].observe([trace], [report], [nominal_budget],
+                                duration, queue_state)
+
+    def observe_unserved(self, d: int, trace, duration: float) -> None:
+        self.devices[d].observe_unserved([trace], duration)

@@ -108,6 +108,53 @@ class DeviceModel:
         return max(powers)
 
 
+def _device_pert(seed: int, index: int, field: str, scale: float) -> float:
+    """Deterministic multiplier in [1-scale, 1+scale] for device ``index`` of
+    a fleet sampled with ``seed``.
+
+    The hash key is the *delimited string* ``"fleet|{seed}|{index}|{field}"``,
+    never an arithmetic combination of the parts: PR 5's ``_poisson_seed``
+    collided streams with windows because ``seed + window*k + stream`` maps
+    distinct (window, stream) pairs onto the same integer. A delimited string
+    key is injective in (seed, index, field) by construction, so no two
+    devices of any fleet can share a perturbation draw (regression-tested at
+    K=512 in tests/test_fleet.py)."""
+    h = hashlib.md5(f"fleet|{seed}|{index}|{field}".encode()).digest()
+    u = int.from_bytes(h[:4], "little") / 2**32
+    return 1.0 + scale * (2.0 * u - 1.0)
+
+
+class PerturbedDeviceModel(DeviceModel):
+    """One device of a heterogeneous fleet: the base Orin model with scalar
+    time/power multipliers. The scaling is applied to the *output* of
+    ``time_power`` rather than to the model internals, so a device's
+    observation grid is an elementwise rescale of the base model's grid —
+    the property the fleet planner exploits to materialize one dense grid
+    and scale it per device, bitwise-identical to profiling each device
+    point by point (same IEEE multiply either way)."""
+
+    def __init__(self, time_scale: float = 1.0, power_scale: float = 1.0,
+                 index: int = 0):
+        self.time_scale = float(time_scale)
+        self.power_scale = float(power_scale)
+        self.index = int(index)
+
+    def time_power(self, w: WorkloadProfile, pm: PowerMode,
+                   bs: Optional[int] = None) -> tuple[float, float]:
+        t, p = DeviceModel.time_power(self, w, pm, bs)
+        return t * self.time_scale, p * self.power_scale
+
+
+def fleet_device(index: int, seed: int = 0, time_spread: float = 0.10,
+                 power_spread: float = 0.05) -> PerturbedDeviceModel:
+    """Device ``index`` of the fleet sampled with ``seed``: deterministic
+    heterogeneity from collision-free per-(seed, index, field) draws."""
+    return PerturbedDeviceModel(
+        time_scale=_device_pert(seed, index, "time", time_spread),
+        power_scale=_device_pert(seed, index, "power", power_spread),
+        index=index)
+
+
 def f_gpu_power(pm: PowerMode) -> float:
     return (pm.gpuf / MAX_GPUF) ** 1.3
 

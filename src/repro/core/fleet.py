@@ -1,0 +1,428 @@
+"""Fleet-scale serving (``Scenario.FLEET``): K devices as one batched program.
+
+PR 7 scaled the *engine* to 10^5 lanes; this tier scales the whole serving
+loop. A fleet is K heterogeneous edge devices (``fleet_device`` — the base
+Orin model with deterministic per-device time/power multipliers) fed by one
+aggregate arrival stream. Each window:
+
+ 1. **dispatch** — the window's aggregate arrivals are split across devices
+    by deterministic weighted round-robin: each arrival, in time order, goes
+    to the device minimizing ``(n_d + 1) / w_d`` (ties to the lowest index),
+    where ``n_d`` counts this window's assignments so far. ``"capacity"``
+    starts every window's counts at zero with ``w_d = 1 / time_scale_d``
+    (faster devices take proportionally more); ``"least-backlog"`` seeds the
+    counts with each device's carried backlog (join-the-shortest-queue
+    flavor). The dispatched window keeps provenance: the merged trace's
+    ``stream_ids`` are device indices, so ``ArrivalTrace.split`` recovers
+    exactly the per-device traces that ran.
+ 2. **plan** — the K per-device closed-loop controller windows run the PR-5/6
+    ladder (EWMA rate estimate, feedback-scaled budget, burst quantile,
+    interval solve -> high-rate fallback -> estimate -> nominal-budget retry),
+    but each rung is ONE ``grid_eval.solve_infer_fleet_batch`` call over the
+    still-unsolved devices: every device's observation grid is the shared
+    base grid scaled by its (time, power) multipliers, so the K problems
+    stack into one masked-argmin array program per rung.
+ 3. **execute** — all solved devices run as one ``simulate_batch`` call
+    (devices ARE lanes; PR 7's chunked max-plus dispatch does the rest),
+    each with its own carried ``QueueState``; reports fold back into the
+    per-device controller states.
+
+Correctness contract (enforced by ``tests/test_fleet.py``):
+``serve_fleet`` is **bitwise identical on NumPy** (tolerance-identical on
+jax, like the engine itself) to ``serve_fleet_sequential`` — K independent
+single-device closed loops of the existing kind, run one after another over
+the same split traces. The batched solver rungs replay the scalar solvers'
+float ops over per-device scaled grids (``solve_infer_fleet_batch``'s
+contract), ``FleetControllerState`` holds exactly the K scalar controller
+states, and the batched engine's NumPy path runs the identical per-lane
+kernel — so the fleet tier adds speed, never drift.
+
+Single-device refinements that re-enter the controller mid-window
+(admission trimming, backlog splits, ``degrade-bs``) are not fleet-batched;
+configs requesting them are rejected rather than silently ignored.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.core import problem as P
+from repro.core.backend import resolve_backend
+from repro.core.controller import (ControllerConfig, ControllerState,
+                                   FleetControllerState)
+from repro.core.device_model import (DeviceModel, PerturbedDeviceModel,
+                                     WorkloadProfile, fleet_device)
+from repro.core.grid_eval import materialize, solve_infer_fleet_batch
+from repro.core.powermode import PowerModeSpace
+from repro.core.simulate import ArrivalTrace, simulate, simulate_batch
+
+_DISPATCHES = ("capacity", "least-backlog")
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetSpec:
+    """One fleet: how many devices, how they differ, and how arrivals are
+    dispatched. Heterogeneity is sampled deterministically per (seed, index)
+    via collision-free draws (``device_model._device_pert``), so a spec
+    names the same fleet in every process."""
+    n_devices: int
+    seed: int = 0
+    time_spread: float = 0.10     # per-device service-time spread (+-)
+    power_spread: float = 0.05    # per-device power spread (+-)
+    dispatch: str = "capacity"    # "capacity" | "least-backlog"
+
+    def __post_init__(self):
+        if self.n_devices <= 0:
+            raise ValueError("a fleet needs at least one device")
+        if not 0.0 <= self.time_spread < 1.0 \
+                or not 0.0 <= self.power_spread < 1.0:
+            raise ValueError("spreads must be in [0, 1)")
+        if self.dispatch not in _DISPATCHES:
+            raise ValueError(f"unknown dispatch policy {self.dispatch!r}; "
+                             f"use {_DISPATCHES}")
+
+    def devices(self) -> list[PerturbedDeviceModel]:
+        return [fleet_device(d, self.seed, self.time_spread,
+                             self.power_spread)
+                for d in range(self.n_devices)]
+
+
+@dataclasses.dataclass
+class FleetWindowReport:
+    """One fleet window: the per-device ``WindowReport``s (scheduler-shaped,
+    index = device) plus the fleet-level dispatch and goodput account.
+    ``trace`` is the dispatched aggregate window — ``trace.split(K)``
+    recovers each device's arrivals (provenance round-trip)."""
+    rate: float                       # aggregate announced rate
+    devices: list                     # one WindowReport per device
+    trace: ArrivalTrace               # merged; stream_ids = device indices
+    dispatch_counts: np.ndarray       # arrivals dispatched per device
+    offered_requests: int
+    goodput: float                    # fleet-wide in-budget served / offered
+
+    @property
+    def attributed_power(self) -> float:
+        """Summed per-device attributed power (satellite of the per-tenant
+        attribution account): each executed report's time-weighted share —
+        idle devices attribute 0, so this is the fleet's busy power."""
+        return float(sum(wr.report.attributed_power or 0.0
+                         for wr in self.devices if wr.report is not None))
+
+
+def dispatch_arrivals(times: np.ndarray, weights: np.ndarray,
+                      counts0: Optional[np.ndarray] = None) -> np.ndarray:
+    """Deterministic weighted round-robin dispatch: arrival k (time order)
+    goes to the device minimizing ``(counts0_d + n_d + 1) / w_d`` over the
+    running assignment counts ``n_d``, ties to the lowest device index.
+    Returns the per-arrival device index vector.
+
+    Implemented as a merge, not a loop: device d's j-th assignment has key
+    ``(counts0_d + j + 1) / w_d`` — strictly increasing per device — and the
+    greedy order is exactly the first N keys in (key, device) order. Each
+    device can own at most ``(N + C + K) * w_d / W - counts0_d`` of the
+    first N keys (the N-th smallest key is at most ``(N + C + K) / W``
+    with ``C = sum(counts0)``, ``W = sum(w)``), so only ~N + O(K) candidate
+    keys are materialized however large K * N is."""
+    weights = np.asarray(weights, np.float64)
+    K = weights.size
+    n = int(np.asarray(times).size)
+    if K <= 0:
+        raise ValueError("dispatch needs at least one device")
+    if np.any(weights <= 0.0):
+        raise ValueError("dispatch weights must be positive")
+    c0 = np.zeros(K, np.int64) if counts0 is None \
+        else np.asarray(counts0, np.int64)
+    if c0.size != K:
+        raise ValueError("counts0 must align with the weights")
+    if n == 0:
+        return np.empty(0, np.int64)
+    W = float(weights.sum())
+    C = int(c0.sum())
+    caps = np.ceil((n + C + K) * weights / W).astype(np.int64) - c0 + 2
+    caps = np.clip(caps, 0, n)
+    keys, devs = [], []
+    for d in range(K):
+        m = int(caps[d])
+        if m <= 0:
+            continue
+        keys.append((c0[d] + 1.0 + np.arange(m)) / weights[d])
+        devs.append(np.full(m, d, np.int64))
+    keys = np.concatenate(keys)
+    devs = np.concatenate(devs)
+    order = np.argsort(keys, kind="stable")   # stable: device-major input,
+    return devs[order[:n]]                    # equal keys -> lowest index
+
+
+def split_window(agg: ArrivalTrace, sid: np.ndarray, n_devices: int,
+                 ) -> tuple[ArrivalTrace, list[ArrivalTrace]]:
+    """The dispatched forms of one aggregate window: the merged trace with
+    device provenance, and the per-device traces (absolute times, so the
+    carryover replay contract applies per device)."""
+    merged = ArrivalTrace(agg.times, agg.duration, agg.kind,
+                          np.asarray(sid, np.int64), int(n_devices))
+    return merged, merged.split(n_devices)
+
+
+def _check_fleet_cfg(cfg: ControllerConfig) -> None:
+    if cfg.admission != "none" or cfg.split_backlog is not None:
+        raise ValueError(
+            "fleet serving batches whole controller windows; admission "
+            "trimming and mid-window splits are single-device refinements "
+            "(serve them per device via Fulcrum.serve_dynamic)")
+
+
+def _fleet_scales(spec: FleetSpec) -> tuple[list, np.ndarray, np.ndarray,
+                                            np.ndarray, np.ndarray]:
+    """(devices, time_scales, power_scales, weights, shares): dispatch
+    weight = 1 / time_scale (a device's service capacity), announced-rate
+    share = normalized weight."""
+    devs = spec.devices()
+    ts = np.array([d.time_scale for d in devs])
+    ps = np.array([d.power_scale for d in devs])
+    wts = 1.0 / ts
+    return devs, ts, ps, wts, wts / wts.sum()
+
+
+def _window_trace(rate: float, i: int, window_duration: float,
+                  arrivals: str, seed: int) -> ArrivalTrace:
+    t0 = i * window_duration
+    win = (ArrivalTrace.uniform(rate, window_duration)
+           if arrivals == "uniform"
+           else ArrivalTrace.poisson(rate, window_duration, seed + i))
+    return win.shifted(t0)
+
+
+def _backlog_counts(states: Sequence[ControllerState],
+                    cfg: ControllerConfig) -> np.ndarray:
+    """Per-device carried-backlog counts (0 with carryover off) — both the
+    ``carried_requests`` account and the ``"least-backlog"`` dispatch seed."""
+    return np.array([len(st.carry)
+                     if cfg.carry_backlog and st.carry is not None else 0
+                     for st in states], np.int64)
+
+
+def _goodput(rep, latency_budget: float, offered: int) -> float:
+    good = int(np.count_nonzero(
+        np.asarray(rep.latencies, np.float64) <= latency_budget))
+    return good / offered if offered else 1.0
+
+
+def _fleet_report(rate, device_reports, merged, counts,
+                  latency_budget) -> FleetWindowReport:
+    offered = len(merged)
+    good = sum(int(np.count_nonzero(
+        np.asarray(wr.report.latencies, np.float64) <= latency_budget))
+        for wr in device_reports if wr.report is not None)
+    return FleetWindowReport(float(rate), device_reports, merged,
+                             counts, offered,
+                             good / offered if offered else 1.0)
+
+
+def serve_fleet(w: WorkloadProfile, power_budget: float,
+                latency_budget: float, rates: Sequence[float],
+                spec: FleetSpec, window_duration: float = 30.0,
+                arrivals: str = "uniform", seed: int = 0,
+                backend: Optional[str] = None,
+                controller: Optional[ControllerConfig] = None,
+                space: Optional[PowerModeSpace] = None,
+                ) -> list[FleetWindowReport]:
+    """Serve a dynamic aggregate trace on a K-device fleet, stepping all K
+    per-device closed-loop windows as one batched program per window: one
+    dispatch pass, one batched solve per ladder rung, one ``simulate_batch``
+    over the solved devices. Bitwise-identical on NumPy to
+    ``serve_fleet_sequential`` (the K independent scalar loops)."""
+    cfg = controller if controller is not None else ControllerConfig()
+    _check_fleet_cfg(cfg)
+    K = spec.n_devices
+    devs, ts, ps, wts, shares = _fleet_scales(spec)
+    grid = materialize(DeviceModel(), w, space or PowerModeSpace(),
+                       P.INFER_BATCH_SIZES)
+    eng_backend = resolve_backend(backend)
+    sol_backend = "numpy" if eng_backend == "numpy" else "jax"
+    state = FleetControllerState(cfg, K)
+    prev_keys: list = [None] * K
+    out: list[FleetWindowReport] = []
+    from repro.core.scheduler import WindowReport
+    for i, rate in enumerate(rates):
+        t0 = i * window_duration
+        agg = _window_trace(float(rate), i, window_duration, arrivals, seed)
+        carried = _backlog_counts(state.devices, cfg)
+        counts0 = carried if spec.dispatch == "least-backlog" else None
+        sid = dispatch_arrivals(agg.times, wts, counts0)
+        merged, dtr = split_window(agg, sid, K)
+        counts = np.bincount(sid, minlength=K).astype(np.int64)
+        announced = float(rate) * shares
+        # the PR-5 ladder, vectorized over the device axis: every rung is
+        # one batched fleet solve over the still-unsolved devices
+        hi = state.plan_rates(announced, t0, window_duration)
+        est = state.plan_rates(announced, t0, window_duration,
+                               margin=1.0, pressure=False)
+        if cfg.burst_quantile > 0.0:
+            hi = np.maximum(hi, [P.burst_rate(e, window_duration,
+                                              cfg.burst_quantile)
+                                 for e in est])
+        bud = state.plan_budgets([latency_budget] * K)
+        sols: list[Optional[P.Solution]] = [None] * K
+        live = est > 0.0            # a zero estimate has no rate to plan at
+        unsolved = np.ones(K, bool)
+
+        def rung(mask, rates_lo, budgets, rate_his):
+            sel = np.flatnonzero(mask)
+            if not sel.size:
+                return
+            probs = [P.InferProblem(power_budget, float(budgets[d]),
+                                    float(rates_lo[d])) for d in sel]
+            res = solve_infer_fleet_batch(probs, rate_his[sel], grid,
+                                          ts[sel], ps[sel],
+                                          backend=sol_backend)
+            for d, s in zip(sel, res):
+                sols[d] = s
+                unsolved[d] = s is None
+
+        # 1. margin headroom: sustainable up to hi, budget held at est
+        rung(live & (hi > est), est, bud, hi)
+        # 2. dead zone: prefer the high end (see _closed_loop_window)
+        rung(live & (hi > est) & unsolved, hi, bud, hi)
+        # 3. the point plan at the estimate
+        rung(live & unsolved, est, bud, est)
+        # 4. feedback tightened into infeasibility: retry at nominal
+        nominal = np.full(K, float(latency_budget))
+        rung(live & unsolved & (bud < nominal), est, nominal, est)
+        lanes = []                  # (device, sol, switch_s)
+        for d in range(K):
+            if sols[d] is not None:
+                switch_s = state.mode_switch(d, sols[d].pm)
+                lanes.append((d, sols[d], switch_s))
+            else:
+                state.observe_unserved(d, dtr[d], window_duration)
+        reps = simulate_batch(
+            DeviceModel(), None, w,
+            [sol.pm for _, sol, _ in lanes],
+            [sol.bs for _, sol, _ in lanes],
+            [dtr[d] for d, _, _ in lanes],
+            tau_caps=[sol.tau_tr for _, sol, _ in lanes],
+            backend=eng_backend,
+            carry_ins=[state.window_carry_in(d, t0, s)
+                       for d, _, s in lanes],
+            devices=[devs[d] for d, _, _ in lanes])
+        device_reports: list = [None] * K
+        for (d, sol, switch_s), rep in zip(lanes, reps):
+            offered = len(dtr[d])
+            gp = _goodput(rep, latency_budget, offered)
+            rep.goodput = gp
+            state.observe(d, dtr[d], rep, latency_budget, window_duration,
+                          rep.queue_state)
+            key = (sol.pm, sol.bs, sol.tau_tr)
+            device_reports[d] = WindowReport(
+                float(announced[d]), sol, rep,
+                estimated_rate=float(est[d]),
+                replanned=key != prev_keys[d], mode_switch_s=switch_s,
+                carried_requests=int(carried[d]), goodput=gp,
+                offered_requests=offered)
+            prev_keys[d] = key
+        for d in range(K):
+            if device_reports[d] is None:
+                offered = len(dtr[d])
+                device_reports[d] = WindowReport(
+                    float(announced[d]), None, None,
+                    estimated_rate=float(est[d]),
+                    carried_requests=int(carried[d]),
+                    goodput=0.0 if offered else 1.0,
+                    offered_requests=offered)
+        out.append(_fleet_report(rate, device_reports, merged, counts,
+                                 latency_budget))
+    return out
+
+
+def serve_fleet_sequential(w: WorkloadProfile, power_budget: float,
+                           latency_budget: float, rates: Sequence[float],
+                           spec: FleetSpec, window_duration: float = 30.0,
+                           arrivals: str = "uniform", seed: int = 0,
+                           backend: Optional[str] = None,
+                           controller: Optional[ControllerConfig] = None,
+                           space: Optional[PowerModeSpace] = None,
+                           ) -> list[FleetWindowReport]:
+    """The reference: the SAME fleet served as K independent single-device
+    closed loops run sequentially — scalar solvers over each device's own
+    observation dict, one single-lane engine call per device per window.
+    ``serve_fleet`` must match this bitwise on NumPy; benchmarks measure the
+    batched speedup against it."""
+    cfg = controller if controller is not None else ControllerConfig()
+    _check_fleet_cfg(cfg)
+    K = spec.n_devices
+    devs, ts, ps, wts, shares = _fleet_scales(spec)
+    base = materialize(DeviceModel(), w, space or PowerModeSpace(),
+                       P.INFER_BATCH_SIZES).to_dict()
+    # device d's observation dict: the base grid rescaled entrywise — the
+    # same floats a per-device profile of PerturbedDeviceModel would yield
+    obs = [{k: (t * ts[d], p * ps[d]) for k, (t, p) in base.items()}
+           for d in range(K)]
+    states = [ControllerState(cfg, 1) for _ in range(K)]
+    prev_keys: list = [None] * K
+    out: list[FleetWindowReport] = []
+    from repro.core.scheduler import WindowReport
+    for i, rate in enumerate(rates):
+        t0 = i * window_duration
+        agg = _window_trace(float(rate), i, window_duration, arrivals, seed)
+        carried = _backlog_counts(states, cfg)
+        counts0 = carried if spec.dispatch == "least-backlog" else None
+        sid = dispatch_arrivals(agg.times, wts, counts0)
+        merged, dtr = split_window(agg, sid, K)
+        counts = np.bincount(sid, minlength=K).astype(np.int64)
+        announced = float(rate) * shares
+        device_reports: list = []
+        for d in range(K):
+            st = states[d]
+            hi = st.plan_rates([announced[d]], t0, window_duration)[0]
+            est = st.plan_rates([announced[d]], t0, window_duration,
+                                margin=1.0, pressure=False)[0]
+            if cfg.burst_quantile > 0.0:
+                hi = max(hi, P.burst_rate(est, window_duration,
+                                          cfg.burst_quantile))
+            bud = st.plan_budgets([latency_budget])[0]
+            sol = None
+            if est > 0.0:
+                if hi > est:
+                    sol = P.solve_infer_interval(
+                        P.InferProblem(power_budget, bud, est), hi, obs[d])
+                    if sol is None:
+                        sol = P.solve_infer(
+                            P.InferProblem(power_budget, bud, hi), obs[d])
+                if sol is None:
+                    sol = P.solve_infer(
+                        P.InferProblem(power_budget, bud, est), obs[d])
+                if sol is None and bud < latency_budget:
+                    sol = P.solve_infer(
+                        P.InferProblem(power_budget, float(latency_budget),
+                                       est), obs[d])
+            offered = len(dtr[d])
+            if sol is None:
+                st.observe_unserved([dtr[d]], window_duration)
+                device_reports.append(WindowReport(
+                    float(announced[d]), None, None,
+                    estimated_rate=float(est),
+                    carried_requests=int(carried[d]),
+                    goodput=0.0 if offered else 1.0,
+                    offered_requests=offered))
+                continue
+            switch_s = st.mode_switch(sol.pm)
+            carry_in = st.window_carry_in(t0, switch_s)
+            rep = simulate(devs[d], None, w, sol.pm, sol.bs, dtr[d],
+                           "managed", tau_cap=sol.tau_tr, backend=backend,
+                           carry_in=carry_in)
+            gp = _goodput(rep, latency_budget, offered)
+            rep.goodput = gp
+            st.observe([dtr[d]], [rep], [latency_budget], window_duration,
+                       rep.queue_state)
+            key = (sol.pm, sol.bs, sol.tau_tr)
+            device_reports.append(WindowReport(
+                float(announced[d]), sol, rep, estimated_rate=float(est),
+                replanned=key != prev_keys[d], mode_switch_s=switch_s,
+                carried_requests=int(carried[d]), goodput=gp,
+                offered_requests=offered))
+            prev_keys[d] = key
+        out.append(_fleet_report(rate, device_reports, merged, counts,
+                                 latency_budget))
+    return out

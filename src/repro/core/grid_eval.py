@@ -393,6 +393,70 @@ def solve_infer_batch(problems: Sequence[P.InferProblem],
     return out
 
 
+def solve_infer_fleet_batch(problems: Sequence[P.InferProblem],
+                            rate_his: Sequence[float],
+                            obs: Union[dict, ObservationGrid],
+                            time_scales: Sequence[float],
+                            power_scales: Sequence[float],
+                            backend: str = "numpy"
+                            ) -> list[Optional[P.Solution]]:
+    """Batched ``problem.solve_infer_interval`` across K heterogeneous
+    devices sharing one *base* observation grid: device k's grid is the base
+    grid scaled elementwise by its ``(time_scales[k], power_scales[k])``
+    (the ``PerturbedDeviceModel`` law — same IEEE multiply as profiling the
+    device point by point, so results are bitwise equal to the scalar solve
+    over each device's own dict). Row k solves ``problems[k]`` against
+    device k: sustainability at ``max(rate_his[k], arrival_rate)``, latency
+    budget and objective at the problem's (low-end) rate. The fleet planner
+    solves all K per-device windows with one call per window."""
+    check_backend(backend, ("numpy", "jax"))
+    grid = as_infer_grid(obs)
+    out: list[Optional[P.Solution]] = [None] * len(problems)
+    if not len(grid) or not len(problems):
+        return out
+    n = len(problems)
+    if not (len(rate_his) == len(time_scales) == len(power_scales) == n):
+        raise ValueError("rate_his / time_scales / power_scales must align "
+                         "with the problems")
+    pb, lb, ar = _problem_cols(problems, "power_budget", "latency_budget",
+                               "arrival_rate")
+    hi = np.maximum(np.asarray(rate_his, np.float64), ar)
+    ts = np.asarray(time_scales, np.float64)
+    ps = np.asarray(power_scales, np.float64)
+    bsf = grid.bs.astype(np.float64)
+    if backend == "jax":
+        kern = _jax_kernels()["fleet"]
+        for s, e in _chunks(n, len(grid)):
+            pbc, lbc, arc, hic, tsc, psc = _pad_problems(
+                pb[s:e], lb[s:e], ar[s:e], hi[s:e], ts[s:e], ps[s:e])
+            idx, ok, lam_sel = kern(grid.t, grid.p, bsf, pbc, lbc, arc,
+                                    hic, tsc, psc)
+            for k in np.flatnonzero(ok[:e - s]):
+                i = int(idx[k])
+                out[s + k] = P.Solution(pm=grid.modes[i], bs=int(grid.bs[i]),
+                                        time=float(lam_sel[k, i]),
+                                        power=float(grid.p[i] * ps[s + k]))
+        return out
+    # the rate-grouped staircase trick does not survive per-device time
+    # scales (each device reorders the Pareto set); a chunked dense masked
+    # argmin is still one array program per window for the whole fleet.
+    for s, e in _chunks(n, len(grid)):
+        t_k = grid.t[None, :] * ts[s:e, None]
+        p_k = grid.p[None, :] * ps[s:e, None]
+        lam = (bsf[None, :] - 1.0) / ar[s:e, None] + t_k
+        feas = ((p_k <= pb[s:e, None])
+                & (t_k <= bsf[None, :] / hi[s:e, None])
+                & (lam <= lb[s:e, None]))
+        lam_sel = np.where(feas, lam, np.inf)
+        idx = np.argmin(lam_sel, axis=1)
+        for k in np.flatnonzero(feas.any(axis=1)):
+            i = int(idx[k])
+            out[s + k] = P.Solution(pm=grid.modes[i], bs=int(grid.bs[i]),
+                                    time=float(lam[k, i]),
+                                    power=float(p_k[k, i]))
+    return out
+
+
 def _align_train(infer_grid: ObservationGrid, train_grid: ObservationGrid):
     """Per-infer-entry train observations; entries whose mode is absent from
     the train grid are masked out (the scalar loop skips them)."""
@@ -618,10 +682,13 @@ def solve_multi_tenant_batch(problems: Sequence["P.MultiTenantProblem"],
     skey = _multi_spec_key(p0.streams)
     for pr in problems:
         if pr.n_streams != n or pr.train != p0.train \
-                or _multi_spec_key(pr.streams) != skey:
+                or _multi_spec_key(pr.streams) != skey \
+                or pr.priorities != p0.priorities:
             raise ValueError("solve_multi_tenant_batch needs a uniform "
                              "stream shape (count, train flag, workloads, "
-                             "batch sizes) across the problem batch")
+                             "batch sizes, priorities) across the problem "
+                             "batch")
+    weights = p0.priority_weights()
     grids = [as_infer_grid(o) for o in infer_obs]
     tg = as_train_grid(train_obs) if p0.train else None
     if any(not len(g) for g in grids) or (tg is not None and not len(tg)):
@@ -634,7 +701,7 @@ def solve_multi_tenant_batch(problems: Sequence["P.MultiTenantProblem"],
     ar = np.array([[s.arrival_rate for s in pr.streams] for pr in problems])
     lb = np.array([[s.latency_budget for s in pr.streams] for pr in problems])
     if backend == "jax":
-        return _solve_multi_jax(problems, cand, pb, ar, lb, out)
+        return _solve_multi_jax(problems, cand, pb, ar, lb, out, weights)
     rates, inverse = np.unique(ar, axis=0, return_inverse=True)
     inverse = inverse.reshape(-1)
     for ri in range(rates.shape[0]):
@@ -643,7 +710,11 @@ def solve_multi_tenant_batch(problems: Sequence["P.MultiTenantProblem"],
         if not keep.size:
             continue
         pm_c = cand.pmax[keep]
-        worst = lam.max(axis=1)
+        # the priority-weighted worst-latency secondary objective (scalar:
+        # max_j(w_j * lam_j)); unset priorities apply no multiplication at
+        # all — the bitwise-default contract
+        worst = lam.max(axis=1) if weights is None \
+            else (lam * np.asarray(weights, np.float64)[None, :]).max(axis=1)
         for s, e in _chunks(sel.size, keep.size * n):
             rows = sel[s:e]
             feas = ((pm_c[None, :] <= pb[rows, None])
@@ -667,11 +738,16 @@ def solve_multi_tenant_batch(problems: Sequence["P.MultiTenantProblem"],
     return out
 
 
-def _solve_multi_jax(problems, cand: "_MultiCandidates", pb, ar, lb, out):
+def _solve_multi_jax(problems, cand: "_MultiCandidates", pb, ar, lb, out,
+                     weights=None):
     kern = _jax_kernels()["multi_train" if cand.t_tr is not None
                          else "multi_infer"]
+    # unit weights reproduce the unweighted objective bitwise (1.0 * x == x
+    # in IEEE-754), so the kernel always takes a weight vector
+    wts = np.ones(cand.n) if weights is None \
+        else np.asarray(weights, np.float64)
     args = (cand.t_in, cand.bsf, cand.pmax) + (
-        (cand.t_tr,) if cand.t_tr is not None else ())
+        (cand.t_tr,) if cand.t_tr is not None else ()) + (wts,)
     for s, e in _chunks(len(problems), cand.K * cand.n):
         pbc, arc, lbc = _pad_problems(pb[s:e], ar[s:e], lb[s:e])
         idx, ok, tau_s, theta_s, lam_s = kern(*args, pbc, arc, lbc)
@@ -699,7 +775,7 @@ _TRACE_COUNTS = {"solver": 0}
 
 
 def solver_trace_count() -> int:
-    """Number of solver-kernel (re)traces since import (all five kernels)."""
+    """Number of solver-kernel (re)traces since import (all six kernels)."""
     return _TRACE_COUNTS["solver"]
 
 
@@ -742,7 +818,21 @@ def _jax_kernels() -> dict:
             return jnp.argmin(lam_masked), feas.any(), tau, theta, lam
         return jax.vmap(one)(pb, lb, ar)
 
-    def _multi_one(t_in, bsf, pmax, t_tr, b_p, b_a, b_l):
+    @jax.jit
+    def fleet_kernel(t, p, bsf, pb, lb, ar, hi, ts, ps):
+        _TRACE_COUNTS["solver"] += 1
+        def one(b_p, b_l, b_a, b_h, k_t, k_p):
+            # device row: the base grid scaled by this device's (time,
+            # power) factors — the PerturbedDeviceModel law
+            tk = t * k_t
+            pk = p * k_p
+            lam = (bsf - 1.0) / b_a + tk
+            feas = (pk <= b_p) & (tk <= bsf / b_h) & (lam <= b_l)
+            lam_sel = jnp.where(feas, lam, jnp.inf)
+            return jnp.argmin(lam_sel), feas.any(), lam_sel
+        return jax.vmap(one)(pb, lb, ar, hi, ts, ps)
+
+    def _multi_one(t_in, bsf, pmax, t_tr, wts, b_p, b_a, b_l):
         n = t_in.shape[1]
         cycle = bsf / b_a[None, :]
         sus = (t_in <= cycle).all(axis=1)
@@ -762,7 +852,7 @@ def _jax_kernels() -> dict:
             lam = (bsf - 1.0) / b_a[None, :] + t_in
             lam = lam + (total[:, None] - t_in)
         feas = sus & (pmax <= b_p) & (lam <= b_l[None, :]).all(axis=1)
-        worst = lam.max(axis=1)
+        worst = (lam * wts[None, :]).max(axis=1)
         if t_tr is None:
             tau = jnp.zeros(t_in.shape[0])
             theta = jnp.zeros(t_in.shape[0])
@@ -777,16 +867,16 @@ def _jax_kernels() -> dict:
         return i, feas.any(), tau[i], theta[i], lam[i]
 
     @jax.jit
-    def multi_train_kernel(t_in, bsf, pmax, t_tr, pb, ar, lb):
+    def multi_train_kernel(t_in, bsf, pmax, t_tr, wts, pb, ar, lb):
         _TRACE_COUNTS["solver"] += 1
         return jax.vmap(lambda p, a, l: _multi_one(
-            t_in, bsf, pmax, t_tr, p, a, l))(pb, ar, lb)
+            t_in, bsf, pmax, t_tr, wts, p, a, l))(pb, ar, lb)
 
     @jax.jit
-    def multi_infer_kernel(t_in, bsf, pmax, pb, ar, lb):
+    def multi_infer_kernel(t_in, bsf, pmax, wts, pb, ar, lb):
         _TRACE_COUNTS["solver"] += 1
         return jax.vmap(lambda p, a, l: _multi_one(
-            t_in, bsf, pmax, None, p, a, l))(pb, ar, lb)
+            t_in, bsf, pmax, None, wts, p, a, l))(pb, ar, lb)
 
     def x64(fn):
         def wrapped(*args):
@@ -797,6 +887,7 @@ def _jax_kernels() -> dict:
 
     _JAX_CACHE.update({"train": x64(train_kernel),
                        "infer": x64(infer_kernel),
+                       "fleet": x64(fleet_kernel),
                        "concurrent": x64(concurrent_kernel),
                        "multi_train": x64(multi_train_kernel),
                        "multi_infer": x64(multi_infer_kernel)})

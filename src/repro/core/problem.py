@@ -93,19 +93,46 @@ class MultiTenantProblem:
     """N tenant inference streams sharing one accelerator (and one power
     mode) with — when ``train`` — a training workload filling the slack.
     Primary objective: max training throughput (min worst-tenant latency
-    when ``train`` is False); secondary: min worst-tenant latency."""
+    when ``train`` is False); secondary: min worst-tenant latency.
+
+    ``priorities`` (one positive weight per stream, optional) makes the
+    latency side of the objective priority-aware: the solver minimizes the
+    worst *priority-weighted* latency ``max_j(w_j * lam_j)`` with
+    ``w_j = priority_j / max(priorities)``, so a high-priority tenant's
+    latency dominates the tie-break and low-priority tenants absorb the
+    slack. Unset (the default) means no weighting is applied at all —
+    today's unweighted results are reproduced bitwise. Per-stream latency
+    *budgets* stay hard constraints regardless of priority."""
     power_budget: float
     streams: tuple
     train: bool = True
+    priorities: Optional[tuple] = None
 
     def __post_init__(self):
         object.__setattr__(self, "streams", tuple(self.streams))
         if not self.streams:
             raise ValueError("MultiTenantProblem needs at least one stream")
+        if self.priorities is not None:
+            pr = tuple(float(p) for p in self.priorities)
+            if len(pr) != len(self.streams):
+                raise ValueError(f"expected {len(self.streams)} priorities, "
+                                 f"got {len(pr)}")
+            if any(p <= 0.0 for p in pr):
+                raise ValueError("priorities must be positive")
+            object.__setattr__(self, "priorities", pr)
 
     @property
     def n_streams(self) -> int:
         return len(self.streams)
+
+    def priority_weights(self) -> Optional[tuple]:
+        """Per-stream objective weights ``priority_j / max(priorities)``;
+        ``None`` (no weighting applied — the bitwise default) when
+        priorities are unset."""
+        if self.priorities is None:
+            return None
+        mx = max(self.priorities)
+        return tuple(p / mx for p in self.priorities)
 
     def pair_view(self) -> ConcurrentProblem:
         """The equivalent pair problem (requires exactly one stream)."""
@@ -474,6 +501,7 @@ def solve_multi_tenant(problem: MultiTenantProblem, train_obs: Optional[dict],
     allowed0 = None if spec0.batch_sizes is None else set(spec0.batch_sizes)
     rest = [_stream_candidates(obs, s)
             for obs, s in zip(infer_obs[1:], problem.streams[1:])]
+    weights = problem.priority_weights()
     best = None
     best_key = None
     # stream 0 scans its observations in dict order — with one stream this
@@ -506,7 +534,8 @@ def solve_multi_tenant(problem: MultiTenantProblem, train_obs: Optional[dict],
             if any(lam > s.latency_budget
                    for lam, s in zip(lams, problem.streams)):
                 continue
-            worst = max(lams)
+            worst = max(lams) if weights is None \
+                else max(w * lam for w, lam in zip(weights, lams))
             if problem.train:
                 tau = multi_interleave_tau(bss, rates, t_ins, t_tr)
                 theta = tau / multi_cycle(bss, rates)
@@ -548,6 +577,7 @@ def solve_multi_tenant_interval(problem: MultiTenantProblem,
     allowed0 = None if spec0.batch_sizes is None else set(spec0.batch_sizes)
     rest = [_stream_candidates(obs, s)
             for obs, s in zip(infer_obs[1:], problem.streams[1:])]
+    weights = problem.priority_weights()
     best = None
     best_key = None
     for (pm, bs0), (t0, p0) in infer_obs[0].items():
@@ -578,7 +608,8 @@ def solve_multi_tenant_interval(problem: MultiTenantProblem,
             if any(lam > s.latency_budget
                    for lam, s in zip(lams, problem.streams)):
                 continue
-            worst = max(lams)
+            worst = max(lams) if weights is None \
+                else max(w * lam for w, lam in zip(weights, lams))
             if problem.train:
                 tau = multi_interleave_tau(bss, his, t_ins, t_tr)
                 theta = tau / multi_cycle(bss, his)

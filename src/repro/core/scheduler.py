@@ -63,17 +63,21 @@ class Scenario(enum.Enum):
     CONCURRENT_INFERENCE = "concurrent_inference"
     DYNAMIC = "dynamic"
     MULTI_TENANT = "multi_tenant"
+    FLEET = "fleet"
 
     @property
     def canonical(self) -> "Scenario":
         """The solver family a scenario maps onto: concurrent inference is
         the concurrent problem with the non-urgent inference in the training
-        role, dynamic is per-window inference (§5.4)."""
+        role, dynamic is per-window inference (§5.4), and fleet is K
+        per-device dynamic loops — per-window inference again, batched
+        over the device axis."""
         return _CANONICAL.get(self, self)
 
 
 _CANONICAL = {Scenario.CONCURRENT_INFERENCE: Scenario.CONCURRENT,
-              Scenario.DYNAMIC: Scenario.INFER}
+              Scenario.DYNAMIC: Scenario.INFER,
+              Scenario.FLEET: Scenario.INFER}
 
 
 def as_nonurgent(w: WorkloadProfile, bs: int = 32) -> WorkloadProfile:
@@ -525,7 +529,7 @@ class Fulcrum:
                             tuple(dataclasses.replace(
                                 s, arrival_rate=float(h))
                                 for s, h in zip(prob.streams, rate_his)),
-                            train=prob.train))
+                            train=prob.train, priorities=prob.priorities))
                     tobs = mp.train.observed_modes() if mp.train else None
                     sol = P.solve_multi_tenant_interval(
                         prob, rate_his, tobs, mp.infer_observed())
@@ -625,6 +629,28 @@ class Fulcrum:
                              and by_window[i].trace is not None else 0)
                 for i, (rate, sol, rp)
                 in enumerate(zip(rates, sols, replanned))]
+
+    def serve_fleet(self, w: WorkloadProfile, power_budget: float,
+                    latency_budget: float, rates: Sequence[float],
+                    fleet, window_duration: float = 30.0,
+                    arrivals: str = "uniform", seed: int = 0,
+                    backend: Optional[str] = None,
+                    controller: Optional[ControllerConfig] = None):
+        """``Scenario.FLEET``: serve one aggregate dynamic trace on a
+        K-device heterogeneous fleet (``fleet`` is a ``core.fleet.FleetSpec``
+        or a device count), dispatching each window's arrivals across
+        devices and stepping all K closed-loop controller windows as one
+        batched program (one batched grid solve per ladder rung, one
+        ``simulate_batch`` with per-lane devices per window). Returns one
+        ``FleetWindowReport`` per window; bitwise-identical on NumPy to K
+        sequential single-device loops (``fleet.serve_fleet_sequential``)."""
+        from repro.core import fleet as F
+        spec = F.FleetSpec(int(fleet)) if not isinstance(fleet, F.FleetSpec) \
+            else fleet
+        return F.serve_fleet(w, power_budget, latency_budget, rates, spec,
+                             window_duration=window_duration,
+                             arrivals=arrivals, seed=seed, backend=backend,
+                             controller=controller, space=self.space)
 
     def _serve_closed_loop(self, w, power_budget, latency_budget, rates,
                            strategy, window_duration, arrivals, seed,
@@ -991,7 +1017,8 @@ class Fulcrum:
                     power_budget,
                     tuple(dataclasses.replace(s, arrival_rate=float(r),
                                               latency_budget=float(b))
-                          for s, r, b in zip(specs, rs, bs_)), train=train)
+                          for s, r, b in zip(specs, rs, bs_)), train=train,
+                    priorities=cfg.priorities)
 
             sol = None
             if est != base:
@@ -1027,7 +1054,8 @@ class Fulcrum:
                 sol = solve(P.MultiTenantProblem(
                     power_budget,
                     tuple(dataclasses.replace(s, arrival_rate=float(r))
-                          for s, r in zip(specs, est)), train=train))
+                          for s, r in zip(specs, est)), train=train,
+                    priorities=cfg.priorities))
             rate = tuple(float(r) for r in rvec)
             deferred_in = state.pop_deferred(t0) if adm.active else None
             shed = deferred_out = 0

@@ -297,6 +297,13 @@ class ExecutionReport:
     shed_requests: int = 0            # offered requests dropped at admission
     deferred_requests: int = 0        # offered requests pushed to next window
     goodput: Optional[float] = None   # in-budget served / offered fraction
+    # fleet / tenant power accounting: this report's time-weighted share of
+    # the device's interleaved-window power (busy time of this stream over
+    # total busy time; the training share lives on the parent multi-tenant
+    # report). Shares across a window sum to the device power; an idle
+    # window (nothing ran) attributes 0.
+    attributed_power: Optional[float] = dataclasses.field(
+        default=None, compare=False)
     _sorted: Optional[np.ndarray] = dataclasses.field(
         default=None, init=False, repr=False, compare=False)
 
@@ -527,6 +534,19 @@ def _time_power(device: DeviceModel, w: WorkloadProfile, pm: PowerMode,
     return out
 
 
+def _attribute_power(power: float, busys: Sequence[float]) -> list[float]:
+    """Time-weighted power attribution: split a device's interleaved-window
+    power across its consumers proportionally to busy time. The managed
+    engine runs one DNN at a time, so busy time IS the fraction of the
+    window each consumer held the device; the shares sum to ``power`` by
+    construction. An idle window (no work ran) attributes 0 to everyone —
+    the plan's static power belongs to no tenant."""
+    total = float(sum(busys))
+    if total <= 0.0:
+        return [0.0 for _ in busys]
+    return [power * (b / total) for b in busys]
+
+
 # ---------------------------------------------------------------------------
 # the three execution approaches
 # ---------------------------------------------------------------------------
@@ -569,8 +589,11 @@ def _managed_engine(device: DeviceModel, w_tr: Optional[WorkloadProfile],
     power = max(p_in, p_tr if trained else 0.0)
     state = QueueState(times[ready.size * bs:],
                        float(c[-1]) if c.size else clock)
+    attr = _attribute_power(power, [c.size * t_in,
+                                    trained * t_tr if trained else 0.0])
     return ExecutionReport("managed", _latencies(c, times, bs), trained,
-                           trace.duration, power, trace, queue_state=state)
+                           trace.duration, power, trace, queue_state=state,
+                           attributed_power=attr[0])
 
 
 def _native_engine(device: DeviceModel, w_tr: WorkloadProfile,
@@ -832,6 +855,10 @@ class MultiTenantReport:
     shed_requests: int = 0
     deferred_requests: int = 0
     goodput: Optional[float] = None
+    # the training job's time-weighted share of the device power; each
+    # tenant's share is on its stream report — together they sum to
+    # ``power`` (0 everywhere for an idle window)
+    train_attributed_power: Optional[float] = None
 
     @property
     def train_throughput(self) -> float:
@@ -934,17 +961,23 @@ def simulate_multi_tenant(device: DeviceModel,
     for _, p_in in tps:
         power = max(power, p_in)
     duration = max((tr.duration for tr in traces), default=0.0)
-    reports = []
+    reports, busys = [], []
     for j, (tr, b) in enumerate(zip(eff_traces, bss)):
         comp_j = c[sid == j]
         lat = np.repeat(comp_j, int(b)) - tr.times[:comp_j.size * int(b)]
+        busys.append(comp_j.size * t_ins[j])
         reports.append(ExecutionReport("managed", lat, 0, tr.duration,
                                        power, tr))
+    attr = _attribute_power(power,
+                            busys + [trained * t_tr if trained else 0.0])
+    for rep, a in zip(reports, attr):
+        rep.attributed_power = a
     state = _multi_tenant_state([tr.times for tr in eff_traces], bss, c,
                                 clock)
     return MultiTenantReport(reports, trained, duration, power,
                              ArrivalTrace.merge(eff_traces),
-                             queue_state=state)
+                             queue_state=state,
+                             train_attributed_power=attr[-1])
 
 
 def simulate_multi_tenant_batch(
@@ -1012,18 +1045,25 @@ def simulate_multi_tenant_batch(
         for _, p_in in tps:
             power = max(power, p_in)
         duration = max((tr.duration for tr in tracess[i]), default=0.0)
-        streams = []
+        streams, busys = [], []
         for j, (tr, b) in enumerate(zip(eff, bsss[i])):
             comp_j = comp[sid == j]
             lat = np.repeat(comp_j, int(b)) - tr.times[:comp_j.size * int(b)]
+            busys.append(comp_j.size * tps[j][0])
             streams.append(ExecutionReport("managed", lat, 0, tr.duration,
                                            power, tr))
+        attr = _attribute_power(power,
+                                busys + [trained * ttr[0] if trained
+                                         else 0.0])
+        for rep, a in zip(streams, attr):
+            rep.attributed_power = a
         flat.extend(streams)
         state = _multi_tenant_state([tr.times for tr in eff], bsss[i], comp,
                                     clock)
         out.append(MultiTenantReport(streams, trained, duration, power,
                                      ArrivalTrace.merge(eff),
-                                     queue_state=state))
+                                     queue_state=state,
+                                     train_attributed_power=attr[-1]))
     _presort_reports(flat, backend=backend)
     return out
 
@@ -1067,6 +1107,7 @@ def simulate_batch(device: DeviceModel, w_tr: Optional[WorkloadProfile],
                    approach: str = "managed", seed: int = 0,
                    backend: Optional[str] = None,
                    carry_ins: Optional[Sequence[Optional[QueueState]]] = None,
+                   devices: Optional[Sequence[DeviceModel]] = None,
                    ) -> list[ExecutionReport]:
     """Run many (power mode, batch size, trace) simulations as one batch.
 
@@ -1076,7 +1117,10 @@ def simulate_batch(device: DeviceModel, w_tr: Optional[WorkloadProfile],
     reports' quantile/violation caches are filled by the vectorized report
     builder. Only the managed approach is deterministic enough to batch on
     jax; native/streams lanes always use the seeded NumPy models.
-    ``carry_ins`` (managed only) gives each lane a carried ``QueueState``."""
+    ``carry_ins`` (managed only) gives each lane a carried ``QueueState``.
+    ``devices`` gives each lane its own device model (the fleet tier: lanes
+    ARE devices); the scan arithmetic is unchanged — heterogeneity enters
+    only through each lane's (t, p) timings."""
     n = len(pms)
     if not (len(bss) == len(traces) == n):
         raise ValueError("pms / bss / traces must align")
@@ -1086,6 +1130,9 @@ def simulate_batch(device: DeviceModel, w_tr: Optional[WorkloadProfile],
     carries = list(carry_ins) if carry_ins is not None else [None] * n
     if len(carries) != n:
         raise ValueError("carry_ins must align with the lanes")
+    devs = list(devices) if devices is not None else [device] * n
+    if len(devs) != n:
+        raise ValueError("devices must align with the lanes")
     if approach != "managed" and any(ci is not None for ci in carries):
         raise ValueError("carry-in backlog is only defined for the "
                          "deterministic managed approach")
@@ -1095,18 +1142,20 @@ def simulate_batch(device: DeviceModel, w_tr: Optional[WorkloadProfile],
     if backend == "numpy" or approach != "managed":
         engine = ENGINES[approach]
         if approach == "managed":
-            reports = [engine(device, w_tr, w_in, pm, int(bs), tr, seed, cap,
+            reports = [engine(dv, w_tr, w_in, pm, int(bs), tr, seed, cap,
                               ci)
-                       for pm, bs, tr, cap, ci
-                       in zip(pms, bss, traces, caps, carries)]
+                       for dv, pm, bs, tr, cap, ci
+                       in zip(devs, pms, bss, traces, caps, carries)]
         else:
-            reports = [engine(device, w_tr, w_in, pm, int(bs), tr, seed, cap)
-                       for pm, bs, tr, cap in zip(pms, bss, traces, caps)]
+            reports = [engine(dv, w_tr, w_in, pm, int(bs), tr, seed, cap)
+                       for dv, pm, bs, tr, cap
+                       in zip(devs, pms, bss, traces, caps)]
         _presort_reports(reports)
         return reports
-    tps = [_time_power(device, w_in, pm, int(bs)) for pm, bs in zip(pms, bss)]
-    ttr = [_time_power(device, w_tr, pm, None) if w_tr else (np.inf, 0.0)
-           for pm in pms]
+    tps = [_time_power(dv, w_in, pm, int(bs))
+           for dv, pm, bs in zip(devs, pms, bss)]
+    ttr = [_time_power(dv, w_tr, pm, None) if w_tr else (np.inf, 0.0)
+           for dv, pm in zip(devs, pms)]
     lane_times = [_carry_times(tr, ci) for tr, ci in zip(traces, carries)]
     readies = [_batch_ready(times, int(bs))
                for (times, _), bs in zip(lane_times, bss)]
@@ -1124,9 +1173,13 @@ def simulate_batch(device: DeviceModel, w_tr: Optional[WorkloadProfile],
         power = max(tps[i][1], ttr[i][1] if trained else 0.0)
         state = QueueState(times[comp.size * int(bs):],
                            float(comp[-1]) if comp.size else clock)
+        attr = _attribute_power(power, [comp.size * tps[i][0],
+                                        trained * ttr[i][0] if trained
+                                        else 0.0])
         reports.append(ExecutionReport(
             "managed", _latencies(comp, times, int(bs)), trained,
-            tr.duration, power, tr, queue_state=state))
+            tr.duration, power, tr, queue_state=state,
+            attributed_power=attr[0]))
     _presort_reports(reports, backend=backend)
     return reports
 
@@ -1160,9 +1213,12 @@ def managed_scalar(device: DeviceModel, w_tr: Optional[WorkloadProfile],
         latencies.extend(now - arrivals[j] for j in range(i, i + bs))
         i += bs
     power = max(p_in, p_tr if trained else 0.0)
+    attr = _attribute_power(power, [(i // bs) * t_in,
+                                    trained * t_tr if trained else 0.0])
     return ExecutionReport("managed", latencies, trained, trace.duration,
                            power, trace,
-                           queue_state=QueueState(times[i:], now))
+                           queue_state=QueueState(times[i:], now),
+                           attributed_power=attr[0])
 
 
 def batch_ready_events(arrivals: Sequence[Sequence[float]],
@@ -1216,12 +1272,19 @@ def multi_tenant_scalar(device: DeviceModel, w_tr: Optional[WorkloadProfile],
     duration = max((tr.duration for tr in traces), default=0.0)
     reports = [ExecutionReport("managed", lat, 0, tr.duration, power, tr)
                for lat, tr in zip(latencies, eff_traces)]
+    attr = _attribute_power(
+        power, [(len(lat) // int(b)) * tps[j][0]
+                for j, (lat, b) in enumerate(zip(latencies, bss))]
+        + [trained * t_tr if trained else 0.0])
+    for rep, a in zip(reports, attr):
+        rep.attributed_power = a
     state = _multi_tenant_state(
         [tr.times for tr in eff_traces], bss,
         np.asarray([now] if events else [], np.float64), clock)
     return MultiTenantReport(reports, trained, duration, power,
                              ArrivalTrace.merge(eff_traces),
-                             queue_state=state)
+                             queue_state=state,
+                             train_attributed_power=attr[-1])
 
 
 def native_scalar(device: DeviceModel, w_tr: WorkloadProfile,

@@ -1,0 +1,374 @@
+"""Fleet tier (``Scenario.FLEET``): the batched K-device serving loop must be
+*bitwise* identical on NumPy to K sequential single-device closed loops over
+the same split traces (the PR's correctness contract), the weighted
+round-robin dispatch must match its greedy definition and round-trip
+provenance, the per-device perturbation draws must be collision-free at
+K=512, the batched fleet solver must replay the scalar solver over scaled
+grids, and priority weighting must default (None / all-equal) to the
+unweighted solver bitwise."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import fleet as F
+from repro.core import grid_eval as G
+from repro.core import problem as P
+from repro.core import simulate as S
+from repro.core.backend import jax_available
+from repro.core.controller import ControllerConfig
+from repro.core.device_model import (DeviceModel, INFER_WORKLOADS,
+                                     TRAIN_WORKLOADS, _device_pert,
+                                     fleet_device)
+from repro.core.powermode import PowerModeSpace
+from repro.core.scheduler import Fulcrum, Scenario
+
+DEV = DeviceModel()
+SPACE = PowerModeSpace()
+W_IN = INFER_WORKLOADS["mobilenet"]
+
+
+# ---------------------------------------------------------------------------
+# (a) heterogeneity: collision-free deterministic perturbations
+# ---------------------------------------------------------------------------
+
+def test_device_perturbations_collision_free_at_k512():
+    # the _poisson_seed trap: arithmetic seed mixing collides distinct
+    # (index, field) pairs; the delimited-string key must not. 512 devices
+    # x 2 fields = 1024 draws, all distinct.
+    draws = [_device_pert(0, d, f, 0.10)
+             for d in range(512) for f in ("time", "power")]
+    assert len(set(draws)) == len(draws)
+    assert all(0.90 <= x <= 1.10 for x in draws)
+    # different seeds name different fleets; same seed is reproducible
+    assert _device_pert(1, 7, "time", 0.1) != _device_pert(2, 7, "time", 0.1)
+    assert _device_pert(3, 7, "time", 0.1) == _device_pert(3, 7, "time", 0.1)
+
+
+def test_fleet_device_scales_grid_elementwise():
+    d = fleet_device(5, seed=9)
+    for pm in SPACE.all_modes()[:8]:
+        for bs in (1, 32):
+            t0, p0 = DEV.time_power(W_IN, pm, bs)
+            t1, p1 = d.time_power(W_IN, pm, bs)
+            assert t1 == t0 * d.time_scale and p1 == p0 * d.power_scale
+
+
+def test_fleet_spec_validation():
+    with pytest.raises(ValueError):
+        F.FleetSpec(0)
+    with pytest.raises(ValueError):
+        F.FleetSpec(4, time_spread=1.5)
+    with pytest.raises(ValueError):
+        F.FleetSpec(4, dispatch="round-trip")
+    assert len(F.FleetSpec(4).devices()) == 4
+
+
+# ---------------------------------------------------------------------------
+# (b) dispatch: greedy definition, vectorized merge, provenance round-trip
+# ---------------------------------------------------------------------------
+
+def _greedy_dispatch(n, weights, counts0=None):
+    counts = (np.zeros(len(weights), np.int64) if counts0 is None
+              else np.asarray(counts0, np.int64).copy())
+    out = np.empty(n, np.int64)
+    for k in range(n):
+        out[k] = int(np.argmin((counts + 1.0) / weights))
+        counts[out[k]] += 1
+    return out
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_dispatch_matches_greedy_reference(seed):
+    rng = np.random.default_rng(seed)
+    K = int(rng.integers(1, 12))
+    n = int(rng.integers(0, 400))
+    wts = rng.uniform(0.5, 2.0, K)
+    c0 = rng.integers(0, 30, K) if rng.random() < 0.5 else None
+    got = F.dispatch_arrivals(np.zeros(n), wts, c0)
+    assert np.array_equal(got, _greedy_dispatch(n, wts, c0))
+
+
+def test_dispatch_proportional_to_capacity():
+    wts = np.array([1.0, 1.0, 2.0])        # device 2 is twice as fast
+    sid = F.dispatch_arrivals(np.zeros(400), wts)
+    counts = np.bincount(sid, minlength=3)
+    assert counts[2] == 200 and counts[0] == counts[1] == 100
+
+
+def test_dispatch_provenance_round_trips():
+    agg = S.ArrivalTrace.poisson(80.0, 5.0, seed=3)
+    wts = np.array([1.0, 1.3, 0.8, 1.1])
+    sid = F.dispatch_arrivals(agg.times, wts)
+    merged, per_dev = F.split_window(agg, sid, 4)
+    assert merged.n_streams == 4 and len(merged) == len(agg)
+    # split(K) recovers exactly the per-device arrival times, in order
+    re_split = merged.split(4)
+    for tr, tr2, d in zip(per_dev, re_split, range(4)):
+        assert np.array_equal(tr.times, agg.times[sid == d])
+        assert np.array_equal(tr.times, tr2.times)
+        assert tr.duration == agg.duration
+
+
+# ---------------------------------------------------------------------------
+# (c) the batched fleet solver == per-device scalar solves over scaled grids
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["numpy", "jax"])
+def test_fleet_solver_matches_scalar_over_scaled_grids(backend):
+    if backend == "jax" and not jax_available():
+        pytest.skip("jax unavailable")
+    rng = np.random.default_rng(11)
+    grid = G.materialize(DEV, W_IN, SPACE, P.INFER_BATCH_SIZES)
+    base = grid.to_dict()
+    n = 40
+    ts = rng.uniform(0.9, 1.1, n)
+    ps = rng.uniform(0.95, 1.05, n)
+    probs = [P.InferProblem(float(rng.uniform(10, 55)),
+                            float(rng.uniform(0.05, 1.5)),
+                            float(rng.uniform(5, 150))) for _ in range(n)]
+    his = np.array([p.arrival_rate * float(rng.uniform(1.0, 1.6))
+                    for p in probs])
+    got = G.solve_infer_fleet_batch(probs, his, grid, ts, ps,
+                                    backend=backend)
+    for k, (pr, sol) in enumerate(zip(probs, got)):
+        obs = {key: (t * ts[k], p * ps[k]) for key, (t, p) in base.items()}
+        ref = P.solve_infer_interval(pr, float(his[k]), obs)
+        assert (sol is None) == (ref is None)
+        if ref is not None:
+            assert (sol.pm, sol.bs) == (ref.pm, ref.bs)
+            if backend == "numpy":
+                assert sol.time == ref.time and sol.power == ref.power
+            else:
+                np.testing.assert_allclose([sol.time, sol.power],
+                                           [ref.time, ref.power],
+                                           atol=1e-8, rtol=1e-9)
+
+
+def test_fleet_solver_validates_alignment():
+    grid = G.materialize(DEV, W_IN, SPACE, P.INFER_BATCH_SIZES)
+    probs = [P.InferProblem(30.0, 0.5, 50.0)] * 2
+    with pytest.raises(ValueError):
+        G.solve_infer_fleet_batch(probs, [60.0], grid, [1.0, 1.0],
+                                  [1.0, 1.0])
+
+
+# ---------------------------------------------------------------------------
+# (d) THE contract: batched fleet == K sequential single-device loops
+# ---------------------------------------------------------------------------
+
+def _assert_fleet_equal(a, b, exact=True):
+    assert len(a) == len(b)
+    for wa, wb in zip(a, b):
+        assert np.array_equal(wa.dispatch_counts, wb.dispatch_counts)
+        assert wa.offered_requests == wb.offered_requests
+        assert np.array_equal(wa.trace.stream_ids, wb.trace.stream_ids)
+        if exact:
+            assert wa.goodput == wb.goodput
+        for da, db in zip(wa.devices, wb.devices):
+            assert (da.solution is None) == (db.solution is None)
+            assert da.carried_requests == db.carried_requests
+            assert da.replanned == db.replanned
+            assert da.offered_requests == db.offered_requests
+            if exact:
+                assert da.rate == db.rate
+                assert da.estimated_rate == db.estimated_rate
+                assert da.goodput == db.goodput
+            if da.solution is None:
+                continue
+            assert (da.solution.pm, da.solution.bs) \
+                == (db.solution.pm, db.solution.bs)
+            if exact:
+                assert da.solution == db.solution
+                assert da.report.latencies.tolist() \
+                    == db.report.latencies.tolist()
+                assert da.report.power == db.report.power
+                assert da.report.attributed_power \
+                    == db.report.attributed_power
+                assert da.report.queue_state.pending.tolist() \
+                    == db.report.queue_state.pending.tolist()
+                assert da.report.queue_state.clock \
+                    == db.report.queue_state.clock
+            else:
+                np.testing.assert_allclose(da.report.latencies,
+                                           db.report.latencies,
+                                           atol=1e-8, rtol=1e-9)
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_batched_fleet_bitwise_equals_sequential_numpy(seed):
+    rng = np.random.default_rng(seed)
+    spec = F.FleetSpec(int(rng.integers(2, 9)), seed=seed,
+                       dispatch=("capacity", "least-backlog")[seed % 2])
+    cfg = ControllerConfig(rate_estimator="ewma",
+                           feedback=bool(seed % 2),
+                           carry_backlog=True,
+                           mode_switch_s=0.25 * (seed % 2),
+                           burst_quantile=0.9 if seed == 1 else 0.0)
+    rates = [float(r) for r in rng.uniform(20.0, 500.0, 4)]
+    kw = dict(window_duration=3.0, arrivals="poisson", seed=seed + 100,
+              backend="numpy", controller=cfg)
+    a = F.serve_fleet(W_IN, 30.0, 0.2, rates, spec, **kw)
+    b = F.serve_fleet_sequential(W_IN, 30.0, 0.2, rates, spec, **kw)
+    _assert_fleet_equal(a, b, exact=True)
+
+
+def test_batched_fleet_with_idle_devices_matches_sequential():
+    # aggregate rate so low a window dispatches nothing to some devices —
+    # idle lanes must still observe (rate estimate decays) and report
+    # goodput 1.0 on zero offered
+    spec = F.FleetSpec(8, seed=1)
+    cfg = ControllerConfig(rate_estimator="ewma", carry_backlog=True)
+    kw = dict(window_duration=2.0, arrivals="poisson", seed=5,
+              backend="numpy", controller=cfg)
+    a = F.serve_fleet(W_IN, 30.0, 0.2, [2.0, 1.0], spec, **kw)
+    b = F.serve_fleet_sequential(W_IN, 30.0, 0.2, [2.0, 1.0], spec, **kw)
+    _assert_fleet_equal(a, b, exact=True)
+    idle = [d for d, c in enumerate(a[0].dispatch_counts) if c == 0]
+    assert idle                              # the setup really idles devices
+    for d in idle:
+        assert a[0].devices[d].goodput == 1.0
+        assert a[0].devices[d].offered_requests == 0
+
+
+def test_batched_fleet_jax_matches_numpy_within_tolerance():
+    if not jax_available():
+        pytest.skip("jax unavailable")
+    spec = F.FleetSpec(4, seed=2)
+    cfg = ControllerConfig(rate_estimator="ewma", carry_backlog=True)
+    kw = dict(window_duration=3.0, arrivals="poisson", seed=7,
+              controller=cfg)
+    a = F.serve_fleet(W_IN, 30.0, 0.2, [200.0, 400.0, 80.0], spec,
+                      backend="jax", **kw)
+    b = F.serve_fleet(W_IN, 30.0, 0.2, [200.0, 400.0, 80.0], spec,
+                      backend="numpy", **kw)
+    _assert_fleet_equal(a, b, exact=False)
+
+
+def test_fleet_rejects_single_device_refinements():
+    for cfg in (ControllerConfig(admission="shed"),
+                ControllerConfig(split_backlog=1.0)):
+        with pytest.raises(ValueError):
+            F.serve_fleet(W_IN, 30.0, 0.2, [50.0], F.FleetSpec(2),
+                          controller=cfg)
+
+
+def test_scenario_fleet_and_scheduler_facade():
+    assert Scenario.FLEET.canonical is Scenario.INFER
+    ful = Fulcrum(DEV, SPACE)
+    out = ful.serve_fleet(W_IN, 30.0, 0.2, [100.0, 150.0], 4,
+                          window_duration=2.0, backend="numpy")
+    assert len(out) == 2 and len(out[0].devices) == 4
+    assert out[0].attributed_power > 0.0
+    # an int fleet arg names the default-spec fleet of that size
+    spec = F.FleetSpec(4)
+    ref = F.serve_fleet(W_IN, 30.0, 0.2, [100.0, 150.0], spec,
+                        window_duration=2.0, backend="numpy",
+                        space=SPACE)
+    _assert_fleet_equal(out, ref, exact=True)
+
+
+# ---------------------------------------------------------------------------
+# (e) satellites: power attribution and priority-weighted objectives
+# ---------------------------------------------------------------------------
+
+def test_single_stream_attribution_equals_power():
+    rep = S.simulate(DEV, None, W_IN, SPACE.maxn(), 16,
+                     S.ArrivalTrace.uniform(50.0, 5.0))
+    assert rep.attributed_power == rep.power   # sole busy share takes all
+    idle = S.simulate(DEV, None, W_IN, SPACE.maxn(), 16,
+                      S.ArrivalTrace.uniform(0.0, 5.0))
+    assert idle.attributed_power == 0.0        # nothing ran, nothing billed
+
+
+def test_multi_tenant_attribution_sums_to_device_power():
+    w_tr = TRAIN_WORKLOADS["mobilenet"]
+    ws = [INFER_WORKLOADS["mobilenet"], INFER_WORKLOADS["resnet50"]]
+    traces = [S.ArrivalTrace.uniform(40.0, 10.0),
+              S.ArrivalTrace.uniform(15.0, 10.0)]
+    rep = S.simulate_multi_tenant(DEV, w_tr, ws, SPACE.maxn(), [16, 4],
+                                  traces)
+    shares = [s.attributed_power for s in rep.streams] \
+        + [rep.train_attributed_power]
+    assert all(s >= 0.0 for s in shares)
+    assert np.isclose(sum(shares), rep.power)
+    # time-weighted: the busier stream is billed more per unit time served
+    assert rep.streams[0].attributed_power > 0.0
+
+
+def test_priorities_none_and_uniform_are_bitwise_default():
+    rng = np.random.default_rng(4)
+    sub = SPACE.all_modes()[::12]
+    w_tr = TRAIN_WORKLOADS["resnet18"]
+    tobs = {pm: DEV.time_power(w_tr, pm) for pm in sub}
+    iobs = {(pm, bs): DEV.time_power(W_IN, pm, bs)
+            for pm in sub for bs in P.INFER_BATCH_SIZES}
+    for _ in range(25):
+        streams = tuple(
+            P.StreamSpec(float(rng.uniform(5, 60)),
+                         float(rng.uniform(0.1, 1.0)), W_IN)
+            for _ in range(2))
+        prob = P.MultiTenantProblem(float(rng.uniform(15, 55)), streams,
+                                    train=w_tr)
+        ref = P.solve_multi_tenant(prob, tobs, [iobs, iobs])
+        for pri in ((1.0, 1.0), (7.0, 7.0)):
+            got = P.solve_multi_tenant(
+                dataclasses.replace(prob, priorities=pri),
+                tobs, [iobs, iobs])
+            assert (ref is None) == (got is None)
+            if ref is not None:
+                assert ref.pm == got.pm and ref.bss == got.bss
+                assert ref.times == got.times    # bitwise
+                assert ref.power == got.power
+
+
+def test_priorities_skew_the_latency_objective():
+    # two identical streams; the solver breaks ties on the worst *weighted*
+    # latency, so any skew must weakly improve the favored stream's latency
+    sub = SPACE.all_modes()[::6]
+    iobs = {(pm, bs): DEV.time_power(W_IN, pm, bs)
+            for pm in sub for bs in P.INFER_BATCH_SIZES}
+    streams = tuple(P.StreamSpec(40.0, 1.0, W_IN) for _ in range(2))
+    base = P.MultiTenantProblem(40.0, streams, train=False)
+    ref = P.solve_multi_tenant(base, None, [iobs, iobs])
+    skew = P.solve_multi_tenant(
+        dataclasses.replace(base, priorities=(100.0, 1.0)),
+        None, [iobs, iobs])
+    assert ref is not None and skew is not None
+    assert skew.times[0] <= ref.times[0] + 1e-12
+    # weights normalize to priority/max; validation rejects bad shapes
+    assert base.priority_weights() is None
+    w = dataclasses.replace(base, priorities=(2.0, 1.0)).priority_weights()
+    assert w == (1.0, 0.5)
+    with pytest.raises(ValueError):
+        P.MultiTenantProblem(40.0, streams, train=False,
+                             priorities=(1.0,))
+    with pytest.raises(ValueError):
+        P.MultiTenantProblem(40.0, streams, train=False,
+                             priorities=(1.0, -2.0))
+
+
+@pytest.mark.parametrize("backend", ["numpy", "jax"])
+def test_priority_batch_solver_matches_scalar(backend):
+    if backend == "jax" and not jax_available():
+        pytest.skip("jax unavailable")
+    sub = SPACE.all_modes()[::8]
+    iobs = {(pm, bs): DEV.time_power(W_IN, pm, bs)
+            for pm in sub for bs in P.INFER_BATCH_SIZES}
+    ig = G.ObservationGrid.from_infer_dict(iobs)
+    streams = tuple(P.StreamSpec(30.0, 0.6, W_IN) for _ in range(2))
+    # the batch solver requires uniform priorities per batch: one batch
+    # call per priority vector, each checked against the scalar solver
+    for pri in (None, (1.0, 1.0), (10.0, 1.0), (1.0, 10.0)):
+        probs = [P.MultiTenantProblem(float(pb), streams, train=False,
+                                      priorities=pri)
+                 for pb in (20.0, 35.0, 55.0)]
+        got = G.solve_multi_tenant_batch(probs, None, [ig, ig],
+                                         backend=backend)
+        for pr, sol in zip(probs, got):
+            ref = P.solve_multi_tenant(pr, None, [iobs, iobs])
+            assert (sol is None) == (ref is None)
+            if ref is not None:
+                assert sol.pm == ref.pm and sol.bss == ref.bss
+                if backend == "numpy":
+                    assert sol.times == ref.times and sol.power == ref.power
