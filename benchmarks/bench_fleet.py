@@ -11,7 +11,17 @@ speedup, and the parity between the two are snapshotted to
 ``benchmarks/results/BENCH_fleet.json``. Parity is the PR's contract: the
 NumPy rows must agree *bitwise* (max |diff| exactly 0.0) and the jax rows
 within engine tolerance; ``--check`` gates batched >= sequential configs/s
-at K=64 and the parity bounds on every recorded backend."""
+at K=64 and the parity bounds on every recorded backend.
+
+The ``admission/*`` matrix exercises fleet-wide resource control under a
+burst/drain overload (per-device rate multipliers 3.0 / 4.5 / 1.0 / 2.5)
+with a tight shared power budget (27 W x K water-filled across devices):
+shed vs defer admission, uniform vs poisson arrivals, backlog migration
+off vs on, at K in {8} (quick) or {8, 64} (full). ``--check`` gates the
+overload SLO story (poisson shed satisfied_frac >= 0.90 — admission must
+trim the flood down to windows that meet the deadline) and the migration
+story (on the K=8 uniform-shed drain scenario, migrating carried backlog
+to less-loaded devices must improve worst-device goodput)."""
 from __future__ import annotations
 
 import time
@@ -36,6 +46,70 @@ JAX_TOL = 1e-6                # engine parity bound (atol 1e-8 per lane,
 CFG = ControllerConfig(rate_estimator="ewma", rate_margin=1.5,
                        feedback=True, carry_backlog=True,
                        mode_switch_s=0.25)
+
+# --- admission/* matrix: fleet-wide resource control under overload ------
+ADM_RATES = [3.0, 4.5, 1.0, 2.5]  # burst, peak, drain, recover (x base rate)
+ADM_DEFER_CAP = 2000              # fleet-wide parking-lot bound (defer mode)
+ADM_BUDGET_PER_DEV_W = 27.0       # shared cap = 27 W x K, below the 30 W
+                                  # nameplate so water-filling has to choose
+SATISFIED_VIOL = 0.05             # a window "satisfies" the SLO when its
+                                  # pooled executed violation rate is <= 5%
+MIGRATION_GATE_KEY = "admission/uniform/shed/k8"  # the drain scenario the
+                                  # migration gate is judged on
+
+
+def _adm_cfg(mode: str) -> ControllerConfig:
+    return ControllerConfig(rate_estimator="ewma", rate_margin=1.5,
+                            feedback=True, carry_backlog=True,
+                            mode_switch_s=0.25, burst_quantile=0.95,
+                            admission=mode,
+                            defer_cap=ADM_DEFER_CAP if mode == "defer"
+                            else None)
+
+
+def _adm_serve(K: int, arrivals: str, mode: str, migrate: bool):
+    spec = F.FleetSpec(K, seed=3, dispatch="least-backlog",
+                       migrate_backlog=migrate,
+                       fleet_power_budget=ADM_BUDGET_PER_DEV_W * K)
+    return F.serve_fleet(INFER_WORKLOADS["mobilenet"], POWER, LATENCY,
+                         [RATE_PER_DEVICE * m * K for m in ADM_RATES],
+                         spec, window_duration=WINDOW_S, arrivals=arrivals,
+                         seed=11, backend="numpy", controller=_adm_cfg(mode))
+
+
+def _adm_metrics(wins, K: int) -> dict:
+    dev_good = np.zeros(K)
+    dev_off = np.zeros(K)
+    served = violations = satisfied = 0
+    for fw in wins:
+        window_lats = []
+        for d, wr in enumerate(fw.devices):
+            dev_off[d] += wr.offered_requests
+            if wr.report is None:
+                continue
+            lats = np.asarray(wr.report.latencies, np.float64)
+            window_lats.append(lats)
+            served += lats.size
+            violations += int(np.count_nonzero(lats > LATENCY))
+            dev_good[d] += int(np.count_nonzero(lats <= LATENCY))
+        if window_lats:
+            pooled = np.concatenate(window_lats)
+            if pooled.size and \
+                    float(np.mean(pooled > LATENCY)) <= SATISFIED_VIOL:
+                satisfied += 1
+    return {
+        "windows": len(wins),
+        "offered": int(dev_off.sum()),
+        "served": served,
+        "shed": int(sum(w.shed_requests for w in wins)),
+        "deferred": int(sum(w.deferred_requests for w in wins)),
+        "migrated": int(sum(w.migrated_requests for w in wins)),
+        "viol_pct": 100.0 * violations / served if served else 0.0,
+        "satisfied_frac": satisfied / len(wins) if wins else 0.0,
+        "goodput_frac": float(dev_good.sum() / max(dev_off.sum(), 1)),
+        "worst_device_goodput": float(np.min(np.where(
+            dev_off > 0, dev_good / np.maximum(dev_off, 1), 1.0))),
+    }
 
 
 def _windows(full: bool) -> list[float]:
@@ -128,6 +202,23 @@ def run(full: bool = False, quick: bool = False,
             rows.append(row(
                 f"fleet/jax/k{K}/parity_max_abs_diff", jdiff,
                 f"batched={t_j:.3f}s;vs=sequential-numpy"))
+    # admission/* — fleet-wide resource control under overload; the rate
+    # pattern is always the 4-window burst/drain (migration only pays off
+    # once a drain window follows the burst), quick just restricts K
+    for K in ([8, 64] if full else [8]):
+        for arr in ("uniform", "poisson"):
+            for mode in ("shed", "defer"):
+                for mig in (0, 1):
+                    wins = _adm_serve(K, arr, mode, bool(mig))
+                    rec = _adm_metrics(wins, K)
+                    records[f"admission/{arr}/{mode}/k{K}/mig{mig}"] = rec
+                    rows.append(row(
+                        f"admission/{arr}/{mode}/k{K}/mig{mig}"
+                        f"/satisfied_frac", rec["satisfied_frac"],
+                        f"worst={rec['worst_device_goodput']:.3f};"
+                        f"goodput={rec['goodput_frac']:.3f};"
+                        f"shed={rec['shed']};deferred={rec['deferred']};"
+                        f"migrated={rec['migrated']}"))
     snapshot(path, records, configs=configs_total)
     if do_check:
         fails = check(records)
@@ -136,16 +227,21 @@ def run(full: bool = False, quick: bool = False,
         if fails:
             raise SystemExit(1)
         print("check passed: batched >= sequential configs/s at K=64, "
-              "numpy parity bitwise, jax parity within tolerance")
+              "numpy parity bitwise, jax parity within tolerance, "
+              "poisson shed satisfied_frac >= 0.90, migration improves "
+              "worst-device goodput on the drain scenario")
     return rows
 
 
 def check(records: dict) -> list[str]:
-    """CI acceptance gates (issue 8): the batched fleet step must beat the
-    sequential loop on planning throughput at K=64, the NumPy parity must
-    be *bitwise* (max |diff| exactly 0.0 — the correctness contract), and
+    """CI acceptance gates (issues 8 + 9): the batched fleet step must beat
+    the sequential loop on planning throughput at K=64, the NumPy parity
+    must be *bitwise* (max |diff| exactly 0.0 — the correctness contract),
     every recorded jax row must sit within engine tolerance of the
-    sequential NumPy reference. Returns failure strings (empty == pass)."""
+    sequential NumPy reference, every poisson-shed admission cell must hold
+    satisfied_frac >= 0.90 under the flood, and backlog migration must
+    improve worst-device goodput on the K=8 uniform-shed drain scenario.
+    Returns failure strings (empty == pass)."""
     fails = []
     k64 = records.get("fleet/numpy/k64")
     if k64 is None:
@@ -166,6 +262,28 @@ def check(records: dict) -> list[str]:
                          f"max_abs_diff={diff!r}")
         elif key.startswith("fleet/jax/") and not diff <= JAX_TOL:
             fails.append(f"{key}: jax parity {diff!r} > {JAX_TOL}")
+    # admission gates (issue 9): under the poisson flood, shed admission
+    # must trim every window down to the SLO — satisfied_frac >= 0.90
+    found_poisson_shed = False
+    for key, rec in records.items():
+        if key.startswith("admission/poisson/shed/"):
+            found_poisson_shed = True
+            if rec["satisfied_frac"] < 0.90:
+                fails.append(f"{key}: poisson shed satisfied_frac "
+                             f"{rec['satisfied_frac']:.3f} < 0.90")
+    if not found_poisson_shed:
+        fails.append("missing admission/poisson/shed/* records")
+    # migration gate: on the drain scenario, moving carried backlog to
+    # less-loaded devices must improve worst-device goodput
+    off = records.get(f"{MIGRATION_GATE_KEY}/mig0")
+    on = records.get(f"{MIGRATION_GATE_KEY}/mig1")
+    if off is None or on is None:
+        fails.append(f"missing {MIGRATION_GATE_KEY}/mig0 or /mig1")
+    elif not on["worst_device_goodput"] > off["worst_device_goodput"]:
+        fails.append(
+            f"{MIGRATION_GATE_KEY}: migration did not improve worst-device "
+            f"goodput ({off['worst_device_goodput']:.4f} -> "
+            f"{on['worst_device_goodput']:.4f})")
     return fails
 
 
@@ -173,15 +291,18 @@ if __name__ == "__main__":
     import argparse
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
-                    help="K in {8, 64, 512}, 4 rate windows (snapshots "
+                    help="K in {8, 64, 512}, 4 rate windows, admission "
+                         "matrix at K in {8, 64} (snapshots "
                          "BENCH_fleet.json)")
     ap.add_argument("--quick", action="store_true",
-                    help="K in {8, 64}, 2 rate windows (CI-sized; side "
-                         "snapshot)")
+                    help="K in {8, 64}, 2 rate windows, admission matrix "
+                         "at K=8 (CI-sized; side snapshot)")
     ap.add_argument("--check", action="store_true",
                     help="assert the fleet acceptance gates (batched >= "
                          "sequential at K=64, bitwise numpy parity, jax "
-                         "parity within tolerance)")
+                         "parity within tolerance, poisson shed "
+                         "satisfied_frac >= 0.90, migration improves "
+                         "worst-device goodput)")
     args = ap.parse_args()
     for r in run(full=args.full, quick=args.quick, do_check=args.check):
         print(r)

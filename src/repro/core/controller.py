@@ -574,9 +574,38 @@ class FleetControllerState:
             raise ValueError("a fleet needs at least one device")
         self.cfg = cfg
         self.devices = [ControllerState(cfg, 1) for _ in range(n_devices)]
+        # fleet-level deferred backlog (admission mode "defer"): unlike the
+        # per-device ``ControllerState.deferred`` counters, a request a
+        # device rejects re-enters the *dispatcher* at the next window
+        # start — it may land on any device, not the one it bounced off
+        self.fleet_deferred = 0
 
     def __len__(self) -> int:
         return len(self.devices)
+
+    # -- fleet-level deferred requests (admission mode "defer") -------------
+    def push_fleet_deferred(self, n: int) -> int:
+        """Queue ``n`` rejected requests for fleet-wide re-submission at the
+        next window start (they re-enter the dispatcher, re-timestamped).
+        The config's ``defer_cap`` bounds the fleet's total deferred
+        backlog; the overflow is returned for the driver to record as shed
+        — charged, like the per-device counters, to the device that pushed
+        it."""
+        self.fleet_deferred += int(n)
+        cap = self.cfg.defer_cap
+        if cap is None or self.fleet_deferred <= cap:
+            return 0
+        dropped = self.fleet_deferred - cap
+        self.fleet_deferred = cap
+        return dropped
+
+    def pop_fleet_deferred(self) -> int:
+        """Drain the fleet's deferred backlog for re-dispatch: the count of
+        requests to prepend (re-timestamped at the window start) to the next
+        window's aggregate arrivals. Requests the next admission pass
+        rejects again are re-deferred (or shed) by the driver."""
+        n, self.fleet_deferred = self.fleet_deferred, 0
+        return n
 
     def plan_rates(self, announced: Sequence[float], t0: float = 0.0,
                    duration: Optional[float] = None,

@@ -407,8 +407,12 @@ def solve_infer_fleet_batch(problems: Sequence[P.InferProblem],
     device point by point, so results are bitwise equal to the scalar solve
     over each device's own dict). Row k solves ``problems[k]`` against
     device k: sustainability at ``max(rate_his[k], arrival_rate)``, latency
-    budget and objective at the problem's (low-end) rate. The fleet planner
-    solves all K per-device windows with one call per window."""
+    budget and objective at the problem's (low-end) rate. Every problem
+    column — including ``power_budget`` — is per-row, which is how the
+    fleet's shared power cap threads through: ``FleetSpec.fleet_power_budget``
+    water-fills one cap into per-device budgets and each device's grant
+    lands in its problem row. The fleet planner solves all K per-device
+    windows with one call per window."""
     check_backend(backend, ("numpy", "jax"))
     grid = as_infer_grid(obs)
     out: list[Optional[P.Solution]] = [None] * len(problems)

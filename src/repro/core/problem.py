@@ -28,6 +28,8 @@ import dataclasses
 import math
 from typing import Optional, Sequence
 
+import numpy as np
+
 from repro.core.powermode import PowerMode
 
 INFER_BATCH_SIZES = [1, 4, 16, 32, 64]   # paper §6 (BERT capped at 32)
@@ -447,6 +449,34 @@ def solve_infer_capacity(power_budget: float, obs: dict) -> Optional[Solution]:
             best = Solution(pm=pm, bs=bs, time=t, power=p)
             best_cap = cap
     return best
+
+
+def water_fill(demands: np.ndarray, total: float) -> np.ndarray:
+    """Water-filling allocation of one shared budget across demands: when
+    the demands fit (``sum(demands) <= total``) every demand is met and the
+    slack is split evenly; otherwise the classic level allocation
+    ``min(demand_i, level)`` with the level chosen so the grants sum exactly
+    to ``total`` — small demands are met in full, large demands are clipped
+    to the common level. Deterministic closed form (sort + prefix sums), so
+    the batched and sequential fleet drivers compute bitwise-identical
+    per-device power budgets (``FleetSpec.fleet_power_budget``)."""
+    d = np.asarray(demands, np.float64)
+    total = float(total)
+    if d.ndim != 1 or d.size == 0:
+        raise ValueError("water_fill needs a 1-D, non-empty demand vector")
+    if total < 0.0 or np.any(d < 0.0):
+        raise ValueError("demands and total must be non-negative")
+    if float(d.sum()) <= total:
+        return d + (total - float(d.sum())) / d.size
+    ds = np.sort(d, kind="stable")
+    K = d.size
+    filled = 0.0               # sum of demands already met in full
+    for k in range(K):
+        level = (total - filled) / (K - k)
+        if level <= float(ds[k]):
+            return np.minimum(d, level)
+        filled += float(ds[k])
+    return np.minimum(d, float(ds[-1]))     # unreachable: sum(d) > total
 
 
 def solve_concurrent(problem: ConcurrentProblem, train_obs: dict,

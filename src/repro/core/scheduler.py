@@ -641,9 +641,15 @@ class Fulcrum:
         or a device count), dispatching each window's arrivals across
         devices and stepping all K closed-loop controller windows as one
         batched program (one batched grid solve per ladder rung, one
-        ``simulate_batch`` with per-lane devices per window). Returns one
-        ``FleetWindowReport`` per window; bitwise-identical on NumPy to K
-        sequential single-device loops (``fleet.serve_fleet_sequential``)."""
+        ``simulate_batch`` with per-lane devices per window). Fleet-wide
+        resource control is opt-in: ``controller.admission`` runs the exact
+        deadline-drop mask per device with rejected requests shed or
+        re-entering the *dispatcher* (defer), ``FleetSpec.migrate_backlog``
+        re-dispatches carried backlog between windows, and
+        ``FleetSpec.fleet_power_budget`` water-fills one shared cap into
+        per-device budgets. Returns one ``FleetWindowReport`` per window;
+        bitwise-identical on NumPy to K sequential single-device loops
+        (``fleet.serve_fleet_sequential``) for every feature combination."""
         from repro.core import fleet as F
         spec = F.FleetSpec(int(fleet)) if not isinstance(fleet, F.FleetSpec) \
             else fleet

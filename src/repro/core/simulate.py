@@ -253,7 +253,13 @@ class QueueState:
     trace as K windows chained through ``QueueState`` is bitwise identical on
     NumPy to replaying it in one call — the carried floats re-enter the same
     recurrence at the same positions (boundary-replay style,
-    ``docs/exactness.md``)."""
+    ``docs/exactness.md``). Fleet backlog migration
+    (``fleet._migrate_backlog``) re-dispatches these pending vectors across
+    devices between windows: a request that stays keeps its timestamp (its
+    replay is bitwise this contract), one that moves is re-timestamped at
+    the window start so the receiving device's pending vector stays
+    nondecreasing — the migration-replay corollary in
+    ``docs/exactness.md``."""
     pending: np.ndarray
     clock: float = 0.0
     stream_ids: Optional[np.ndarray] = None

@@ -246,11 +246,15 @@ def test_batched_fleet_jax_matches_numpy_within_tolerance():
 
 
 def test_fleet_rejects_single_device_refinements():
-    for cfg in (ControllerConfig(admission="shed"),
-                ControllerConfig(split_backlog=1.0)):
-        with pytest.raises(ValueError):
-            F.serve_fleet(W_IN, 30.0, 0.2, [50.0], F.FleetSpec(2),
-                          controller=cfg)
+    # admission is fleet-batched since the global-admission PR; the one
+    # remaining single-device refinement is mid-window re-entry
+    with pytest.raises(ValueError, match="split_backlog"):
+        F.serve_fleet(W_IN, 30.0, 0.2, [50.0], F.FleetSpec(2),
+                      controller=ControllerConfig(split_backlog=1))
+    out = F.serve_fleet(W_IN, 30.0, 0.2, [50.0], F.FleetSpec(2),
+                        controller=ControllerConfig(admission="shed"),
+                        backend="numpy")
+    assert len(out) == 1
 
 
 def test_scenario_fleet_and_scheduler_facade():
