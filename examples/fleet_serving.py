@@ -8,10 +8,13 @@ multipliers (``fleet_device``), governed by its own closed-loop controller
 state (EWMA rate estimate, latency feedback, backlog carryover). The
 batched step is bitwise-identical on NumPy to serving the K devices one by
 one with the existing single-device loop — ``--sequential`` runs that
-reference instead so the two can be diffed.
+reference instead so the two can be diffed. ``--fused`` (jax/pallas only)
+collapses each window further: the whole plan ladder + admission + engine
+runs as ONE compiled launch per window (``core.fused_window``), and the
+per-window host-dispatch count is printed from the backend counters.
 
 Run: PYTHONPATH=src python examples/fleet_serving.py [--devices 8]
-     [--dispatch least-backlog] [--backend jax] [--sequential]
+     [--dispatch least-backlog] [--backend jax] [--sequential] [--fused]
 """
 import argparse
 
@@ -36,7 +39,12 @@ def main() -> None:
     ap.add_argument("--sequential", action="store_true",
                     help="run the K-sequential-loops reference instead of "
                          "the batched fleet step")
+    ap.add_argument("--fused", action="store_true",
+                    help="run each window as ONE compiled solve+simulate "
+                         "launch (jax/pallas backends only)")
     args = ap.parse_args()
+    if args.fused and args.sequential:
+        ap.error("--fused fuses the batched step; drop --sequential")
 
     spec = F.FleetSpec(args.devices, seed=3, dispatch=args.dispatch)
     cfg = ControllerConfig(rate_estimator="ewma", rate_margin=1.5,
@@ -45,12 +53,21 @@ def main() -> None:
     # aggregate offered rate per window: cruise, surge, recover
     rates = [30.0 * args.devices * m for m in (0.9, 1.5, 0.8, 1.1)]
     serve = F.serve_fleet_sequential if args.sequential else F.serve_fleet
+    kw = {"fused": True} if args.fused else {}
+    from repro.core.backend import dispatch_count
+    d0 = dispatch_count()
     wins = serve(INFER_WORKLOADS[args.dnn], POWER, LATENCY, rates, spec,
                  window_duration=5.0, arrivals="poisson", seed=11,
-                 backend=args.backend, controller=cfg)
+                 backend=args.backend, controller=cfg, **kw)
+    d1 = dispatch_count()
 
-    print(f"{'batched' if not args.sequential else 'sequential'} fleet of "
+    kind = ("fused" if args.fused
+            else "sequential" if args.sequential else "batched")
+    print(f"{kind} fleet of "
           f"{args.devices} devices, dispatch={args.dispatch}")
+    if d1 > d0:
+        print(f"compiled-program launches: {d1 - d0} "
+              f"({(d1 - d0) / len(rates):.1f} per window)")
     ts = [d.time_scale for d in spec.devices()]
     print(f"device time scales: min={min(ts):.3f} max={max(ts):.3f}")
     print(f"{'win':>3} {'rate':>7} {'offered':>8} {'goodput':>8} "

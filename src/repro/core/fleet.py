@@ -89,10 +89,11 @@ from repro.core.controller import (AdmissionPolicy, ControllerConfig,
                                    ControllerState, FleetControllerState)
 from repro.core.device_model import (DeviceModel, PerturbedDeviceModel,
                                      WorkloadProfile, fleet_device)
+from repro.core.fused_window import fused_fleet_window
 from repro.core.grid_eval import materialize, solve_infer_fleet_batch
 from repro.core.powermode import PowerModeSpace
-from repro.core.simulate import (ArrivalTrace, QueueState, simulate,
-                                 simulate_batch)
+from repro.core.simulate import (ArrivalTrace, ExecutionReport, QueueState,
+                                 _presort_reports, simulate, simulate_batch)
 
 _DISPATCHES = ("capacity", "least-backlog")
 
@@ -432,6 +433,7 @@ def serve_fleet(w: WorkloadProfile, power_budget: float,
                 backend: Optional[str] = None,
                 controller: Optional[ControllerConfig] = None,
                 space: Optional[PowerModeSpace] = None,
+                fused: Optional[bool] = None,
                 ) -> list[FleetWindowReport]:
     """Serve a dynamic aggregate trace on a K-device fleet, stepping all K
     per-device closed-loop windows as one batched program per window: one
@@ -439,10 +441,32 @@ def serve_fleet(w: WorkloadProfile, power_budget: float,
     per ladder rung (per-device water-filled power budgets when the spec
     sets a fleet cap), one admission pass over the solved lanes, one
     ``simulate_batch`` over the admitted traces. Bitwise-identical on NumPy
-    to ``serve_fleet_sequential`` (the K independent scalar loops)."""
+    to ``serve_fleet_sequential`` (the K independent scalar loops).
+
+    ``fused=True`` (jax/pallas backends only) runs each window through the
+    fused solve+simulate program instead — ONE compiled launch per window
+    (``core.fused_window``), tolerance-identical to this per-rung path.
+    The default (``None``/False) keeps the unfused loop, so the NumPy
+    reference path stays byte-identical."""
     cfg = controller if controller is not None else ControllerConfig()
     _check_fleet_features(spec, cfg)
     adm = cfg.admission_policy()
+    if fused:
+        eng = resolve_backend(backend)
+        if eng == "numpy":
+            raise ValueError(
+                "the fused fleet window is a jax program; request "
+                "backend='jax' (or 'pallas'), or leave fused off for the "
+                "NumPy reference path")
+        if adm.mode == "degrade-bs":
+            raise ValueError(
+                "admission mode 'degrade-bs' re-plans on the host between "
+                "solve and simulate (problem.solve_infer_capacity over the "
+                "device dict); serve it unfused — the fused window supports "
+                "admission none/shed/defer")
+        return _serve_fleet_fused(w, power_budget, latency_budget, rates,
+                                  spec, window_duration, arrivals, seed,
+                                  cfg, adm, space)
     K = spec.n_devices
     devs, ts, ps, wts, shares = _fleet_scales(spec)
     grid = materialize(DeviceModel(), w, space or PowerModeSpace(),
@@ -451,12 +475,15 @@ def serve_fleet(w: WorkloadProfile, power_budget: float,
     sol_backend = "numpy" if eng_backend == "numpy" else "jax"
     state = FleetControllerState(cfg, K)
     obs_cache: dict[int, dict] = {}     # degrade-bs only: per-device grids
+    base_obs: list = []                 # the shared base dict, converted at
+    #   most once per serve_fleet call (not once per device)
 
     def device_obs(d: int) -> dict:
         if d not in obs_cache:
-            base = grid.to_dict()
+            if not base_obs:
+                base_obs.append(grid.to_dict())
             obs_cache[d] = {k: (t * ts[d], p * ps[d])
-                            for k, (t, p) in base.items()}
+                            for k, (t, p) in base_obs[0].items()}
         return obs_cache[d]
 
     prev_keys: list = [None] * K
@@ -581,6 +608,167 @@ def serve_fleet(w: WorkloadProfile, power_budget: float,
                     shed_requests=int(shed_d[d]),
                     goodput=0.0 if offered else 1.0,
                     offered_requests=offered)
+        out.append(_fleet_report(
+            rate, device_reports, merged, counts, latency_budget,
+            offered=len(agg), shed=int(shed_d.sum()),
+            deferred=int(def_out_d.sum()), migrated=n_mig,
+            power_budgets=pbud.copy()
+            if spec.fleet_power_budget is not None else None))
+        prev_attr = _attributed_by_device(device_reports)
+    return out
+
+
+def _serve_fleet_fused(w: WorkloadProfile, power_budget: float,
+                       latency_budget: float, rates: Sequence[float],
+                       spec: FleetSpec, window_duration: float,
+                       arrivals: str, seed: int, cfg: ControllerConfig,
+                       adm: AdmissionPolicy,
+                       space: Optional[PowerModeSpace],
+                       ) -> list[FleetWindowReport]:
+    """The fused driver behind ``serve_fleet(fused=True)``: identical
+    host-side bookkeeping (dispatch, deferral, migration, water-filling,
+    controller states) to the unfused loop, but the per-window plan ladder,
+    admission recurrence, and engine run as ONE compiled launch
+    (``core.fused_window.fused_fleet_window``) instead of up to four solver
+    rungs + a host admission pass + an engine launch. Reports are
+    reconstructed from the fetched arrays with the same float ops
+    ``simulate_batch`` would apply, so results match the unfused jax path
+    within the associative-scan tolerance (the padded tree shape is the
+    only difference) and the unfused NumPy reference within the ladder's
+    documented jax tolerance."""
+    K = spec.n_devices
+    devs, ts, ps, wts, shares = _fleet_scales(spec)
+    grid = materialize(DeviceModel(), w, space or PowerModeSpace(),
+                       P.INFER_BATCH_SIZES)
+    state = FleetControllerState(cfg, K)
+    prev_keys: list = [None] * K
+    prev_mode = np.full(K, -1, np.int32)    # committed mode ids; -1 = none
+    prev_attr = np.full(K, float(power_budget))
+    adm_budget = adm.headroom * float(latency_budget)
+    out: list[FleetWindowReport] = []
+    from repro.core.scheduler import WindowReport
+    for i, rate in enumerate(rates):
+        t0 = i * window_duration
+        agg = _window_trace(float(rate), i, window_duration, arrivals, seed)
+        n_mig = _migrate_backlog(state.devices, wts, t0) \
+            if spec.migrate_backlog else 0
+        n_def = state.pop_fleet_deferred() if adm.active else 0
+        carried = _backlog_counts(state.devices, cfg)
+        counts0 = carried if spec.dispatch == "least-backlog" else None
+        merged, dtr, own_dtr, def_counts, counts = _dispatch_fleet_window(
+            agg, n_def, t0, wts, counts0, K)
+        announced = float(rate) * shares
+        pbud = _fleet_power_budgets(spec, power_budget, prev_attr, K)
+        hi = state.plan_rates(announced, t0, window_duration)
+        est = state.plan_rates(announced, t0, window_duration,
+                               margin=1.0, pressure=False)
+        if cfg.burst_quantile > 0.0:
+            hi = np.maximum(hi, [P.burst_rate(e, window_duration,
+                                              cfg.burst_quantile)
+                                 for e in est])
+        bud = state.plan_budgets([latency_budget] * K)
+        nominal = np.full(K, float(latency_budget))
+        live = est > 0.0
+        # the engine-side carry-in, flattened: device d's effective arrival
+        # vector [carried pending, dispatched arrivals] and its pre-switch
+        # clock max(carried clock, t0) — window_carry_in minus the switch
+        # cost, which the program charges in-line from prev_mode
+        eff: list[np.ndarray] = []
+        n_carry = np.zeros(K, np.int64)
+        clock0 = np.full(K, float(t0))
+        for d in range(K):
+            st = state.devices[d]
+            if cfg.carry_backlog and st.carry is not None:
+                pend = np.asarray(st.carry.pending, np.float64)
+                clock0[d] = max(float(st.carry.clock), float(t0))
+                n_carry[d] = pend.size
+                eff.append(np.concatenate([pend, dtr[d].times])
+                           if pend.size else dtr[d].times)
+            else:
+                eff.append(dtr[d].times)
+        res = fused_fleet_window(grid, ts, ps, pbud, bud, nominal, est, hi,
+                                 live, prev_mode, eff, n_carry, clock0,
+                                 float(cfg.mode_switch_s), adm_budget,
+                                 adm.trims)
+        shed_d = np.zeros(K, np.int64)
+        def_out_d = np.zeros(K, np.int64)
+        sols: list = [None] * K
+        switches = np.zeros(K)
+        reps: list = [None] * K
+        for d in range(K):
+            if not res["solved"][d]:
+                if def_counts[d]:
+                    shed_d[d] += state.push_fleet_deferred(
+                        int(def_counts[d]))
+                state.observe_unserved(d, own_dtr[d], window_duration)
+                continue
+            sel = int(res["sel"][d])
+            sol = P.Solution(pm=grid.modes[sel], bs=int(grid.bs[sel]),
+                             time=float(res["lam"][d]),
+                             power=float(res["power"][d]))
+            sols[d] = sol
+            switches[d] = state.mode_switch(d, sol.pm)   # == res["switch"]
+            n_rej = int(res["n_rej"][d])
+            if n_rej:
+                if adm.mode == "defer":
+                    dropped = state.push_fleet_deferred(n_rej)
+                    def_out_d[d] = n_rej - dropped
+                    shed_d[d] = dropped
+                else:
+                    shed_d[d] = n_rej
+            bs = sol.bs
+            n_adm = int(res["n_adm"][d])
+            nb = int(res["n_batches"][d])
+            ctv = np.asarray(res["adm_times"][d][:n_adm], np.float64)
+            if adm.trims and n_rej:
+                # rebuilt exactly as _admit_fleet_device does: the admitted
+                # window arrivals follow the admitted carry prefix
+                nca = int(n_carry[d]) - int(res["n_carry_rej"][d])
+                run_tr = ArrivalTrace(ctv[nca:].copy(), dtr[d].duration,
+                                      dtr[d].kind)
+            else:
+                run_tr = dtr[d]
+            power = float(res["power"][d])
+            reps[d] = ExecutionReport(
+                "managed",
+                np.asarray(res["latencies"][d][:nb * bs], np.float64).copy(),
+                0, run_tr.duration, power, run_tr,
+                queue_state=QueueState(ctv[nb * bs:].copy(),
+                                       float(res["clock_out"][d])),
+                attributed_power=power if nb else 0.0)
+            prev_mode[d] = int(res["mode_id"][d])
+        _presort_reports([r for r in reps if r is not None])
+        device_reports: list = [None] * K
+        for d in range(K):
+            rep = reps[d]
+            offered = len(own_dtr[d])
+            if rep is None:
+                device_reports[d] = WindowReport(
+                    float(announced[d]), None, None,
+                    estimated_rate=float(est[d]),
+                    carried_requests=int(carried[d]),
+                    shed_requests=int(shed_d[d]),
+                    goodput=0.0 if offered else 1.0,
+                    offered_requests=offered)
+                continue
+            sol = sols[d]
+            gp = _goodput(rep, latency_budget, offered)
+            rep.goodput = gp
+            rep.shed_requests = int(shed_d[d])
+            rep.deferred_requests = int(def_out_d[d])
+            state.observe(d, own_dtr[d], rep, latency_budget,
+                          window_duration, rep.queue_state)
+            key = (sol.pm, sol.bs, sol.tau_tr)
+            device_reports[d] = WindowReport(
+                float(announced[d]), sol, rep,
+                estimated_rate=float(est[d]),
+                replanned=key != prev_keys[d],
+                mode_switch_s=float(switches[d]),
+                carried_requests=int(carried[d]),
+                shed_requests=int(shed_d[d]),
+                deferred_requests=int(def_out_d[d]), goodput=gp,
+                offered_requests=offered)
+            prev_keys[d] = key
         out.append(_fleet_report(
             rate, device_reports, merged, counts, latency_budget,
             offered=len(agg), shed=int(shed_d.sum()),

@@ -47,7 +47,7 @@ from typing import Optional, Sequence, Union
 import numpy as np
 
 from repro.core import problem as P
-from repro.core.backend import check_backend, require_jax
+from repro.core.backend import check_backend, record_dispatch, require_jax
 from repro.core.device_model import (MAX_CORES, MAX_CPUF, MAX_GPUF, MAX_MEMF,
                                      DeviceModel, WorkloadProfile, _pert)
 from repro.core.powermode import PowerMode, PowerModeSpace
@@ -430,10 +430,11 @@ def solve_infer_fleet_batch(problems: Sequence[P.InferProblem],
     bsf = grid.bs.astype(np.float64)
     if backend == "jax":
         kern = _jax_kernels()["fleet"]
+        t_dev, p_dev, bsf_dev = device_grid_arrays(grid)
         for s, e in _chunks(n, len(grid)):
             pbc, lbc, arc, hic, tsc, psc = _pad_problems(
                 pb[s:e], lb[s:e], ar[s:e], hi[s:e], ts[s:e], ps[s:e])
-            idx, ok, lam_sel = kern(grid.t, grid.p, bsf, pbc, lbc, arc,
+            idx, ok, lam_sel = kern(t_dev, p_dev, bsf_dev, pbc, lbc, arc,
                                     hic, tsc, psc)
             for k in np.flatnonzero(ok[:e - s]):
                 i = int(idx[k])
@@ -783,6 +784,23 @@ def solver_trace_count() -> int:
     return _TRACE_COUNTS["solver"]
 
 
+def device_grid_arrays(grid: ObservationGrid) -> tuple:
+    """Device-resident copies of a grid's ``(t, p, bs-as-float64)`` columns,
+    uploaded once per grid instance and memoized on it (the cache dies with
+    the grid, like ``_stairs``). Before this, every jax fleet-solver call —
+    four per fleet window — re-transferred the same NumPy columns through
+    ``jnp.asarray``; passing these committed arrays makes that a no-op, and
+    the fused fleet-window program keys its per-window launches on them."""
+    cache = grid.__dict__.get("_device_cols")
+    if cache is None:
+        _jax, jnp, enable_x64 = require_jax()
+        with enable_x64():
+            cache = (jnp.asarray(grid.t), jnp.asarray(grid.p),
+                     jnp.asarray(grid.bs.astype(np.float64)))
+        grid.__dict__["_device_cols"] = cache
+    return cache
+
+
 def _jax_kernels() -> dict:
     if _JAX_CACHE:
         return _JAX_CACHE
@@ -884,6 +902,7 @@ def _jax_kernels() -> dict:
 
     def x64(fn):
         def wrapped(*args):
+            record_dispatch("solver")
             with enable_x64():
                 res = fn(*[jnp.asarray(a) for a in args])
             return tuple(np.asarray(r) for r in res)

@@ -89,7 +89,7 @@ from typing import Callable, Optional, Sequence
 
 import numpy as np
 
-from repro.core.backend import require_jax, resolve_backend
+from repro.core.backend import record_dispatch, require_jax, resolve_backend
 from repro.core.device_model import DeviceModel, WorkloadProfile
 from repro.core.powermode import PowerMode
 
@@ -723,6 +723,7 @@ def _jax_engine() -> Callable:
     kernel = jax.jit(batch, donate_argnums=(0, 1))
 
     def run(ready, exec_t, t_tr, tau_cap, clock):
+        record_dispatch("engine")
         with enable_x64(), _quiet_donation():
             c, trained = kernel(jnp.asarray(ready), jnp.asarray(exec_t),
                                 jnp.asarray(t_tr), jnp.asarray(tau_cap),
@@ -750,6 +751,7 @@ def _pallas_engine() -> Callable:
     kernel = jax.jit(batch, donate_argnums=(0, 1))
 
     def run(ready, exec_t, t_tr, tau_cap, clock):
+        record_dispatch("engine")
         with enable_x64(), _quiet_donation():
             c, trained = kernel(jnp.asarray(ready), jnp.asarray(exec_t),
                                 jnp.asarray(t_tr), jnp.asarray(tau_cap),

@@ -28,6 +28,14 @@ SPACE = PowerModeSpace()
 W_IN = INFER_WORKLOADS["mobilenet"]
 
 
+def _fused_backend(backend):
+    """Skip guard for the fused-window cases: the fused program is jax-tier
+    (``pallas`` resolves to the same program; the engine tier is unused)."""
+    if not jax_available():
+        pytest.skip("jax unavailable")
+    return backend
+
+
 # ---------------------------------------------------------------------------
 # (a) heterogeneity: collision-free deterministic perturbations
 # ---------------------------------------------------------------------------
@@ -376,3 +384,131 @@ def test_priority_batch_solver_matches_scalar(backend):
                 assert sol.pm == ref.pm and sol.bss == ref.bss
                 if backend == "numpy":
                     assert sol.times == ref.times and sol.power == ref.power
+
+
+# ---------------------------------------------------------------------------
+# (f) the fused window: solve + admit + simulate as ONE launch per window
+# ---------------------------------------------------------------------------
+
+_FUSED_MATRIX = {
+    # name -> (FleetSpec kwargs, ControllerConfig kwargs): every fleet
+    # feature the fused program claims to cover, including combinations
+    "heterogeneous": (dict(time_spread=0.25, power_spread=0.15), dict()),
+    "carried-backlog": (dict(), dict(rate_estimator="ewma",
+                                     carry_backlog=True,
+                                     mode_switch_s=0.25)),
+    "shed": (dict(), dict(admission="shed", carry_backlog=True,
+                          mode_switch_s=0.25)),
+    "defer": (dict(dispatch="least-backlog"),
+              dict(admission="defer", defer_cap=25, carry_backlog=True,
+                   rate_estimator="ewma", rate_margin=1.5, feedback=True,
+                   mode_switch_s=0.25)),
+    "water-filled": (dict(migrate_backlog=True, fleet_power_budget=80.0),
+                     dict(carry_backlog=True, feedback=True)),
+}
+
+# idle devices: rates so low whole windows dispatch nothing to some lanes
+_FUSED_RATES = {"idle": [2.0, 0.0, 1.0],
+                "default": [60.0, 110.0, 25.0, 80.0]}
+
+
+@pytest.mark.parametrize("case", sorted(_FUSED_MATRIX))
+@pytest.mark.parametrize("backend", ["jax", "pallas"])
+def test_fused_fleet_matches_unfused(case, backend):
+    _fused_backend(backend)
+    if backend == "pallas":
+        from repro.core.backend import pallas_available
+        if not pallas_available():
+            pytest.skip("pallas unavailable")
+    spec_kw, cfg_kw = _FUSED_MATRIX[case]
+    spec = F.FleetSpec(6, seed=3, **spec_kw)
+    cfg = ControllerConfig(**cfg_kw)
+    rates = _FUSED_RATES["idle" if case == "heterogeneous" else "default"]
+    kw = dict(window_duration=3.0, arrivals="poisson", seed=17,
+              controller=cfg)
+    fus = F.serve_fleet(W_IN, 30.0, 0.15, rates, spec, backend=backend,
+                        fused=True, **kw)
+    unf = F.serve_fleet(W_IN, 30.0, 0.15, rates, spec, backend=backend,
+                        **kw)
+    seq = F.serve_fleet_sequential(W_IN, 30.0, 0.15, rates, spec,
+                                   backend="numpy", **kw)
+    # same jax tier: only the associative scan's padded tree shape differs
+    _assert_fleet_equal(fus, unf, exact=False)
+    # and the exactness ladder back to the bitwise NumPy reference
+    _assert_fleet_equal(fus, seq, exact=False)
+    for wf, wu in zip(fus, unf):
+        assert wf.shed_requests == wu.shed_requests
+        assert wf.deferred_requests == wu.deferred_requests
+        assert wf.migrated_requests == wu.migrated_requests
+        for df, du in zip(wf.devices, wu.devices):
+            assert df.shed_requests == du.shed_requests
+            assert df.deferred_requests == du.deferred_requests
+            assert df.mode_switch_s == du.mode_switch_s
+            if df.report is not None:
+                np.testing.assert_allclose(
+                    df.report.queue_state.pending,
+                    du.report.queue_state.pending, atol=1e-8, rtol=1e-9)
+                np.testing.assert_allclose(
+                    df.report.queue_state.clock,
+                    du.report.queue_state.clock, atol=1e-8, rtol=1e-9)
+                np.testing.assert_allclose(
+                    df.report.attributed_power,
+                    du.report.attributed_power, atol=1e-8, rtol=1e-9)
+
+
+def test_fused_fleet_no_retrace_across_windows():
+    _fused_backend("jax")
+    from repro.core.fused_window import fleet_trace_count
+    spec = F.FleetSpec(6, seed=3)
+    cfg = ControllerConfig(rate_estimator="ewma", carry_backlog=True)
+    kw = dict(window_duration=3.0, arrivals="poisson", seed=17,
+              backend="jax", controller=cfg, fused=True)
+    rates = [80.0] * 3
+    F.serve_fleet(W_IN, 30.0, 0.15, rates, spec, **kw)   # warm the buckets
+    before = fleet_trace_count()
+    F.serve_fleet(W_IN, 30.0, 0.15, rates + [75.0, 85.0], spec, **kw)
+    # steady state: same pow2 (K, event) buckets -> zero new compilations
+    assert fleet_trace_count() == before
+
+
+def test_fused_fleet_one_dispatch_per_window():
+    _fused_backend("jax")
+    from repro.core.backend import dispatch_count
+    spec = F.FleetSpec(4, seed=3)
+    kw = dict(window_duration=3.0, arrivals="poisson", seed=17,
+              backend="jax", fused=True,
+              controller=ControllerConfig(admission="shed"))
+    rates = [60.0, 90.0, 40.0]
+    F.serve_fleet(W_IN, 30.0, 0.15, rates, spec, **kw)   # warm compile
+    before = dispatch_count()
+    F.serve_fleet(W_IN, 30.0, 0.15, rates, spec, **kw)
+    assert dispatch_count() - before == len(rates)       # ONE launch each
+
+
+def test_fused_fleet_rejects_unfusable_configs():
+    # the fused window is a jax program; the NumPy tier has no fused form
+    with pytest.raises(ValueError, match="jax"):
+        F.serve_fleet(W_IN, 30.0, 0.15, [50.0], F.FleetSpec(2),
+                      backend="numpy", fused=True)
+    # degrade-bs re-plans on the host mid-window: unfusable by design
+    if jax_available():
+        with pytest.raises(ValueError, match="degrade-bs"):
+            F.serve_fleet(W_IN, 30.0, 0.15, [50.0], F.FleetSpec(2),
+                          backend="jax", fused=True,
+                          controller=ControllerConfig(
+                              admission="degrade-bs", carry_backlog=True))
+
+
+def test_grid_mode_ids_injective_and_memoized():
+    from repro.core.fused_window import grid_mode_ids
+    grid = G.materialize(DEV, W_IN, SPACE, P.INFER_BATCH_SIZES)
+    ids = grid_mode_ids(grid)
+    assert ids.shape == (len(grid),)
+    # id equality must be PowerMode equality — the in-program mode-switch
+    # charge depends on it
+    by_id: dict = {}
+    for pm, i in zip(grid.modes, ids):
+        assert by_id.setdefault(int(i), pm) == pm
+    n_modes = len({pm for pm in grid.modes})
+    assert len(by_id) == n_modes
+    assert grid_mode_ids(grid) is ids            # memoized on the grid

@@ -388,6 +388,34 @@ def test_fleet_defaults_reproduce_pr8_byte_identically():
         assert fw.power_budgets is None
 
 
+def test_fused_run_leaves_default_path_byte_identical():
+    """The fused-window PR's opt-in proof: running the fused jax program
+    first (caches warmed, grid device columns uploaded, counters bumped)
+    must leave the default unfused NumPy run reproducing the PR-8
+    fingerprint byte-for-byte."""
+    from repro.core.backend import jax_available
+    if not jax_available():
+        pytest.skip("jax unavailable")
+    spec = F.FleetSpec(3, seed=2, dispatch="least-backlog")
+    cfg = ControllerConfig(rate_estimator="ewma", rate_margin=1.5,
+                           feedback=True, carry_backlog=True,
+                           mode_switch_s=0.25)
+    kw = dict(window_duration=5.0, arrivals="poisson", seed=9,
+              controller=cfg)
+    F.serve_fleet(W_IN, 30.0, 0.1, [60.0, 90.0, 45.0], spec,
+                  backend="jax", fused=True, **kw)
+    wins = F.serve_fleet(W_IN, 30.0, 0.1, [60.0, 90.0, 45.0], spec,
+                         backend="numpy", **kw)
+    got = [(list(map(int, fw.dispatch_counts)), fw.offered_requests,
+            fw.goodput, fw.attributed_power,
+            [(str(wr.solution.pm), wr.solution.bs,
+              len(wr.report.latencies),
+              float(np.sum(wr.report.latencies)),
+              float(wr.report.queue_state.clock))
+             for wr in fw.devices]) for fw in wins]
+    assert got == _PR8_FINGERPRINT
+
+
 # ---------------------------------------------------------------------------
 # (f) per-feature capability checks: one clear error per unsupported combo
 # ---------------------------------------------------------------------------
